@@ -1,0 +1,103 @@
+"""Paper Fig. 8 + §5.3: execution-time comparison of the model family.
+
+Measures wall time to simulate a WL1 trace with:
+  thermal RC (ours, prefactored BE)  vs  DSS (ours)  vs
+  HotSpot-like (RK4)  vs  3D-ICE-like (per-step LU)  vs PACT-like (TRAP),
+plus DSS regeneration latency (paper: "a few milliseconds") and the
+batched-DSE throughput unique to the TPU formulation.
+
+Absolute times are this container's CPU; the reproduced claim is the
+ORDERING and the orders-of-magnitude separation (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BASELINES, ThermalRCModel, build_network,
+                        discretize_rc, make_2p5d_package, make_3d_package)
+from repro.core.workloads import P2P5D, P3D, wl1
+
+
+def _time(fn, warmup: int = 1, reps: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run_system(system: str, n_steps: int, verbose=True) -> dict:
+    if system.startswith("3d"):
+        pkg, n_src, spec = make_3d_package(16, 3), 48, P3D
+    else:
+        n = int(system.split("_")[1])
+        pkg, n_src, spec = make_2p5d_package(n), n, P2P5D
+    dt = 0.01
+    q = wl1(n_src, dt=dt, spec=spec)[:n_steps].astype(np.float32)
+
+    out = {"system": system, "n_steps": n_steps, "nodes": {}, "times": {}}
+    rc = ThermalRCModel(build_network(pkg))
+    out["nodes"]["thermal_rc"] = rc.net.n
+    sim = rc.make_simulator(dt)
+    theta0 = rc.zero_state()
+    out["times"]["thermal_rc"] = _time(lambda: sim(theta0, q))
+
+    dss = discretize_rc(rc, ts=dt)  # warm (jit of expm)
+    t0 = time.perf_counter()
+    dss = discretize_rc(rc, ts=dt * 0.5)
+    out["times"]["dss_regeneration"] = time.perf_counter() - t0
+    z = np.zeros(rc.net.n, np.float32)
+    out["times"]["dss"] = _time(lambda: dss.simulate(z, q))
+
+    # batched DSE rollout (TPU-native capability; 64 candidates at once)
+    B = 64
+    zb = np.zeros((B, rc.net.n), np.float32)
+    qb = np.tile(q[:, None, :], (1, B, 1))
+    t_batch = _time(lambda: dss.simulate_batch(zb, qb))
+    out["times"]["dss_batched_64"] = t_batch
+    out["times"]["dss_per_candidate"] = t_batch / B
+
+    for name, fn in BASELINES.items():
+        mdl, method = fn(pkg)
+        out["nodes"][name] = mdl.net.n
+        simb = mdl.make_simulator(dt, method)
+        zb0 = mdl.zero_state()
+        out["times"][name] = _time(lambda: simb(zb0, q), warmup=1, reps=1)
+    if verbose:
+        t = out["times"]
+        print(f"[exec_time] {system:8s} rc={t['thermal_rc']:.3f}s "
+              f"dss={t['dss']:.4f}s regen={t['dss_regeneration']*1e3:.1f}ms"
+              f" hotspot={t['hotspot']:.2f}s 3dice={t['3dice']:.2f}s"
+              f" pact={t['pact']:.2f}s", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/exec_time.json")
+    args = ap.parse_args(argv)
+    systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] if args.full \
+        else ["2p5d_16", "3d_16x3"]
+    n_steps = 4000 if args.full else 600
+    results = [run_system(s, n_steps) for s in systems]
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    for r in results:
+        for m, t in r["times"].items():
+            print(f"fig8,{r['system']},{m},{t*1e6:.1f}us_total")
+    return results
+
+
+if __name__ == "__main__":
+    main()

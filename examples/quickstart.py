@@ -1,0 +1,57 @@
+"""Quickstart: the MFIT multi-fidelity model family in ~60 lines.
+
+Builds the paper's 16-chiplet 2.5D system, runs the same WL1 workload
+through the FVM golden reference, the thermal RC model, and the DSS model,
+and prints the cross-fidelity agreement and speedups (paper Fig. 2's
+accuracy/speed ladder).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import (FVMReference, ThermalRCModel, build_network,
+                        discretize_rc, make_2p5d_package, voxelize)
+from repro.core.workloads import wl1
+
+DT = 0.01
+
+pkg = make_2p5d_package(16)
+print(f"package: {pkg.name}, {len(pkg.layers)} layers, "
+      f"{pkg.length*1e3:.1f} mm square")
+
+q = wl1(16, dt=DT, t_stress=2.0, t_prbs=3.0, t_cool=2.0)
+print(f"workload: WL1, {len(q)} steps of {DT}s")
+
+# --- fidelity 1-2: FVM reference (stands in for the paper's FEM) ----------
+t0 = time.time()
+fvm = FVMReference(voxelize(pkg, dx_target=0.5e-3))
+sim_fvm = fvm.make_simulator(DT)
+obs_fvm, _ = sim_fvm(fvm.zero_state(), q)
+obs_fvm = np.asarray(obs_fvm)
+t_fvm = time.time() - t0
+print(f"[FVM  ] {fvm.vm.n_vox} voxels      peak {obs_fvm.max():6.1f} C   "
+      f"{t_fvm:7.2f}s")
+
+# --- fidelity 3: thermal RC ------------------------------------------------
+t0 = time.time()
+rc = ThermalRCModel(build_network(pkg))
+sim_rc = rc.make_simulator(DT)
+obs_rc = np.asarray(sim_rc(rc.zero_state(), q))
+t_rc = time.time() - t0
+print(f"[RC   ] {rc.net.n:5d} nodes       peak {obs_rc.max():6.1f} C   "
+      f"{t_rc:7.2f}s   MAE vs FVM {np.abs(obs_rc-obs_fvm).mean():.3f} C")
+
+# --- fidelity 4: DSS --------------------------------------------------------
+t0 = time.time()
+dss = discretize_rc(rc, ts=DT)
+t_regen = time.time() - t0
+t0 = time.time()
+obs_dss = np.asarray(dss.simulate(np.zeros(rc.net.n, np.float32), q))
+t_dss = time.time() - t0
+print(f"[DSS  ] regen {t_regen:5.2f}s        peak {obs_dss.max():6.1f} C   "
+      f"{t_dss:7.2f}s   MAE vs RC  {np.abs(obs_dss-obs_rc).mean():.3f} C")
+print(f"\nspeedups: RC is {t_fvm/t_rc:.0f}x faster than FVM; "
+      f"DSS is {t_rc/t_dss:.1f}x faster than RC "
+      f"({t_fvm/t_dss:.0f}x vs FVM)")

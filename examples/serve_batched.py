@@ -1,0 +1,10 @@
+"""Batched serving example: prefill a prompt batch, decode with KV caches
+(assignment deliverable (b): serving driver).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "minicpm3-4b", "--batch", "4", "--prompt-len", "12",
+          "--new-tokens", "24"])

@@ -1,0 +1,12 @@
+"""End-to-end driver: train a (reduced) LM for a few hundred steps with the
+MFIT DSS thermal model + DTPM controller in the loop (assignment
+deliverable (b): end-to-end training driver).
+
+Run:  PYTHONPATH=src python examples/train_thermal_aware.py
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(["--arch", "stablelm-1.6b", "--steps", "300", "--batch", "8",
+          "--seq", "64", "--thermal", "--lr", "5e-3",
+          "--ckpt-dir", "/tmp/repro_quickstart_ckpt", "--ckpt-every", "100"])

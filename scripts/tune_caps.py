@@ -1,0 +1,17 @@
+"""Offline capacitance tuning (paper §4.3) — regenerates the default
+per-layer multipliers used by larger systems.
+
+Run:  PYTHONPATH=src python scripts/tune_caps.py
+"""
+import json
+
+from repro.core import make_2p5d_package, make_3d_package, tune_capacitance
+
+out = {}
+for name, pkg in [("2p5d", make_2p5d_package(4)),
+                  ("3d", make_3d_package(4, tiers=2))]:
+    mults = tune_capacitance(pkg, maxiter=60, verbose=True)
+    out[name] = {pkg.layers[li].name: m for li, m in mults.items()}
+    print(name, out[name])
+with open("benchmarks/artifacts/cap_multipliers.json", "w") as f:
+    json.dump(out, f, indent=1)

@@ -1,0 +1,111 @@
+"""Shared config machinery: assigned input shapes + ShapeDtypeStruct specs.
+
+Every (arch x shape) cell is defined here:
+  train_4k     seq 4,096   global_batch 256  -> train_step
+  prefill_32k  seq 32,768  global_batch 32   -> prefill step
+  decode_32k   seq 32,768  global_batch 128  -> serve_step (1 token, full KV)
+  long_500k    seq 524,288 global_batch 1    -> serve_step; ONLY for
+               sub-quadratic archs (mamba2, zamba2) — documented skip for
+               pure full-attention archs (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm as lm_mod
+from ..models.lm import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(mode="train", seq=4096, batch=256),
+    "prefill_32k": dict(mode="prefill", seq=32768, batch=32),
+    "decode_32k": dict(mode="decode", seq=32768, batch=128),
+    "long_500k": dict(mode="decode", seq=524288, batch=1),
+}
+
+# reduced shapes used by per-arch smoke tests (CPU, one step)
+SMOKE_SHAPES = {
+    "train": dict(mode="train", seq=32, batch=2),
+    "prefill": dict(mode="prefill", seq=16, batch=2),
+    "decode": dict(mode="decode", seq=16, batch=2),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                shapes: Optional[dict] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    No device allocation — suitable for jit(...).lower(**specs)."""
+    spec = (shapes or SHAPES)[shape_name]
+    mode, seq, batch = spec["mode"], spec["seq"], spec["batch"]
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    out: dict = {}
+    if mode == "train":
+        out["tokens"] = sds((batch, seq), i32)
+        out["labels"] = sds((batch, seq), i32)
+        if cfg.family == "vlm":
+            out["img"] = sds((batch, cfg.n_img_tokens, cfg.d_img),
+                             jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = sds((batch, cfg.n_audio_ctx, cfg.d_model),
+                                jnp.bfloat16)
+    elif mode == "prefill":
+        out["tokens"] = sds((batch, seq), i32)
+        if cfg.family == "vlm":
+            out["img"] = sds((batch, cfg.n_img_tokens, cfg.d_img),
+                             jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = sds((batch, cfg.n_audio_ctx, cfg.d_model),
+                                jnp.bfloat16)
+    elif mode == "decode":
+        out["token"] = sds((batch,), i32)
+        out["caches"] = jax.eval_shape(
+            partial(lm_mod.make_caches, cfg, batch, seq))
+        # decode starts from a full cache: len = seq - 1
+    else:
+        raise ValueError(mode)
+    return out
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(lm_mod.init_params, cfg), key)
+
+
+def reduced_common(cfg: ArchConfig, **over) -> ArchConfig:
+    """Family-preserving tiny variant for CPU smoke tests."""
+    base = dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=512,
+        head_dim=16, q_lora=32, kv_lora=24, nope_dim=16, rope_dim=8,
+        v_dim=16, n_experts=8 if cfg.n_experts else 0,
+        top_k=min(2, cfg.top_k) if cfg.top_k else 0,
+        # drop-free capacity so prefill/decode consistency is exact
+        moe_cf=float(8 // max(min(2, cfg.top_k), 1)),
+        ssm_state=16 if cfg.ssm_state else 0, ssm_head_dim=8, ssm_chunk=8,
+        hybrid_period=3 if cfg.hybrid_period else 0,
+        cross_every=2 if cfg.cross_every else 0,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        d_img=32 if cfg.d_img else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        n_audio_ctx=8 if cfg.n_audio_ctx else 0,
+    )
+    if cfg.family == "hybrid":
+        base["n_layers"] = 7   # 2 groups x 3 + 1 tail mamba
+    if cfg.family == "vlm":
+        base["n_layers"] = 4   # 2 groups x cross_every(2)
+    if cfg.n_kv == cfg.n_heads:
+        base["n_kv"] = base["n_heads"]
+    base.update(over)
+    return dataclasses.replace(cfg, **base)

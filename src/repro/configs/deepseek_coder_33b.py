@@ -1,0 +1,18 @@
+"""deepseek-coder-33b [dense]: 62L d=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256 — llama-arch (arXiv:2401.14196)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="deepseek-coder-33b", family="dense", n_layers=62, d_model=7168,
+    n_heads=56, n_kv=8, d_ff=19200, vocab=32256, act="swiglu", norm="rms",
+    rope_theta=100000.0, head_dim=128,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

@@ -1,0 +1,21 @@
+"""llama4-scout-17b-a16e [moe]: 48L d=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, 16 experts top-1 + shared expert; early fusion (image
+tokens share the stream; stub embeddings)
+[hf:meta-llama/Llama-4-Scout-17B-16E]."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="llama4-scout-17b-a16e", family="moe", n_layers=48,
+    d_model=5120, n_heads=40, n_kv=8, d_ff=8192, vocab=202048,
+    act="swiglu", norm="rms", rope_theta=500000.0, head_dim=128,
+    n_experts=16, top_k=1, shared_expert=True,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL, shared_expert=True)

@@ -1,0 +1,21 @@
+"""llama-3.2-vision-11b [vlm]: 40L d=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256 — gated cross-attn image layers every 5th layer; vision
+frontend STUBBED (input_specs provides precomputed patch embeddings)
+[hf:meta-llama/Llama-3.2-11B-Vision]."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="llama-3.2-vision-11b", family="vlm", n_layers=40, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=128256, act="swiglu", norm="rms",
+    rope_theta=500000.0, head_dim=128, cross_every=5, n_img_tokens=1601,
+    d_img=7680,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

@@ -1,0 +1,18 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 attn-free, vocab=50280,
+ssm_state=128 — SSD (arXiv:2405.21060)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="mamba2-1.3b", family="ssm", n_layers=48, d_model=2048,
+    vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_groups=1,
+    ssm_chunk=128, subquadratic=True,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

@@ -1,0 +1,20 @@
+"""minicpm3-4b [dense]: 62L d=2560 40H d_ff=6400 vocab=73448 — MLA
+(multi-head latent attention; latent KV cache)
+[hf:openbmb/MiniCPM3-4B]."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="minicpm3-4b", family="dense", n_layers=62, d_model=2560,
+    n_heads=40, n_kv=40, d_ff=6400, vocab=73448, act="swiglu", norm="rms",
+    attn_kind="mla", q_lora=768, kv_lora=256, nope_dim=64, rope_dim=32,
+    v_dim=64, rope_theta=10000.0,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL, attn_kind="mla")

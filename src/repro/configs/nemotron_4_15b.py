@@ -1,0 +1,18 @@
+"""nemotron-4-15b [dense]: 32L d=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000 — squared-ReLU MLP, no gate (arXiv:2402.16819)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="nemotron-4-15b", family="dense", n_layers=32, d_model=6144,
+    n_heads=48, n_kv=8, d_ff=24576, vocab=256000, act="sq_relu", norm="ln",
+    rope_theta=10000.0, head_dim=128,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL, act="sq_relu")

@@ -1,0 +1,18 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d=4096 64H (GQA kv=4) expert d_ff=1536
+vocab=151936, 128 experts top-8 [hf:Qwen/Qwen3-235B-A22B]."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="qwen3-moe-235b-a22b", family="moe", n_layers=94, d_model=4096,
+    n_heads=64, n_kv=4, d_ff=1536, vocab=151936, act="swiglu", norm="rms",
+    rope_theta=1000000.0, head_dim=128, n_experts=128, top_k=8,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

@@ -1,0 +1,19 @@
+"""stablelm-1.6b [dense]: 24L d=2048 32H (kv=32) d_ff=5632 vocab=100352
+[hf:stabilityai/stablelm-2-1_6b]. LayerNorm + SwiGLU + partial rotary
+(we apply full rotary; noted deviation)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="stablelm-1.6b", family="dense", n_layers=24, d_model=2048,
+    n_heads=32, n_kv=32, d_ff=5632, vocab=100352, act="swiglu", norm="ln",
+    rope_theta=10000.0,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

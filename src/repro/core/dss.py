@@ -1,0 +1,113 @@
+"""Discrete State-Space (DSS) model (paper §4.4, Eqs. 8-14).
+
+Exact zero-order-hold discretization of the thermal RC state space:
+
+    A  = C^-1 G,  B = C^-1
+    Ad = expm(A Ts)
+    Bd = A^-1 (Ad - I) B            (paper Eq. 13)
+    theta[k+1] = Ad theta[k] + Bd qdot[k]
+
+We additionally fold the source-distribution matrix P into Bd
+(Bd_src = Bd P, shape N x S) so the runtime step consumes per-source powers
+directly — fewer MACs, no loss of fidelity.
+
+Regeneration from an RC model is a few dense ops and takes milliseconds
+(benchmarked in benchmarks/exec_time.py), matching the paper's claim that a
+DSS model is rebuilt on any config/sampling-period change rather than
+maintained.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.dss_step.ops import dss_rollout, dss_step
+from .rc_model import ThermalRCModel
+
+
+@dataclasses.dataclass
+class DSSModel:
+    ad: jnp.ndarray        # (N, N)
+    bd: jnp.ndarray        # (N, S)  (P folded in)
+    ad_t: jnp.ndarray      # transposed copies for the batched GEMM kernel
+    bd_t: jnp.ndarray
+    H: jnp.ndarray         # (n_obs, N) observation
+    ts: float
+    t_ambient: float
+
+    @property
+    def n(self) -> int:
+        return int(self.ad.shape[0])
+
+    @property
+    def n_sources(self) -> int:
+        return int(self.bd.shape[1])
+
+    def step(self, theta: jnp.ndarray, q_src: jnp.ndarray,
+             backend: str = "auto") -> jnp.ndarray:
+        """Single-trace step. theta (N,), q_src (S,)."""
+        out = dss_step(theta[None, :], q_src[None, :], self.ad_t, self.bd_t,
+                       backend=backend)
+        return out[0]
+
+    def simulate(self, theta0: jnp.ndarray, q_traj: jnp.ndarray,
+                 backend: str = "auto") -> jnp.ndarray:
+        """theta0 (N,), q_traj (T, S) -> chiplet temps (T, n_obs)."""
+        thetas = dss_rollout(theta0[None], q_traj[:, None, :], self.ad_t,
+                             self.bd_t, backend=backend)[:, 0]
+        return thetas @ self.H.T + self.t_ambient
+
+    def simulate_batch(self, theta0: jnp.ndarray, q_traj: jnp.ndarray,
+                       backend: str = "auto") -> jnp.ndarray:
+        """Batched-DSE rollout: theta0 (B,N), q_traj (T,B,S) -> (T,B,n_obs).
+
+        The CPU implementation in the paper evaluates one trace at a time;
+        batching candidate configurations through one GEMM is the TPU-native
+        speedup (DESIGN.md §2).
+        """
+        thetas = dss_rollout(theta0, q_traj, self.ad_t, self.bd_t,
+                             backend=backend)
+        return jnp.einsum("tbn,on->tbo", thetas, self.H) + self.t_ambient
+
+
+def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
+                  dtype=jnp.float32) -> DSSModel:
+    """Build the DSS model from a thermal RC model (paper Eq. 13).
+
+    Computed in float64 on host (expm of a stiff matrix), stored in the
+    requested runtime dtype.
+    """
+    C = np.asarray(rc.C, np.float64)
+    G = np.asarray(rc.G, np.float64)
+    P = np.asarray(rc.P, np.float64)
+    A = G / C[:, None]                      # C^-1 G (diagonal C)
+    ad = _expm(A * ts)
+    # Bd = A^-1 (Ad - I) C^-1 ; then fold P.
+    x = np.linalg.solve(A, ad - np.eye(A.shape[0]))
+    bd = (x / C[None, :]) @ P
+    ad_j = jnp.asarray(ad, dtype)
+    bd_j = jnp.asarray(bd, dtype)
+    return DSSModel(ad=ad_j, bd=bd_j, ad_t=jnp.asarray(ad.T, dtype),
+                    bd_t=jnp.asarray(bd.T, dtype), H=rc.H, ts=ts,
+                    t_ambient=rc.t_ambient)
+
+
+def _expm(a: np.ndarray) -> np.ndarray:
+    """Scaling-and-squaring matrix exponential (host, float64).
+
+    Uses jax.scipy.linalg.expm under float64 to avoid a scipy dependency in
+    the hot path; small N makes this instantaneous.
+    """
+    with jax.experimental.enable_x64():
+        return np.asarray(
+            jax.scipy.linalg.expm(jnp.asarray(a, jnp.float64)))
+
+
+def spectral_radius(dss: DSSModel) -> float:
+    """max |eig(Ad)| — must be < 1 for a dissipative package (stability;
+    property-tested in tests/test_dss.py)."""
+    return float(np.max(np.abs(np.linalg.eigvals(np.asarray(dss.ad,
+                                                            np.float64)))))

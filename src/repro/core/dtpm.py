@@ -1,0 +1,84 @@
+"""Dynamic thermal & power management on top of the DSS model (paper §1,
+§4.4: "DSS models ... enabling runtime thermal management").
+
+The ThermalManager embeds the millisecond-class DSS model in the training /
+serving loop: each step it advances the thermal state from the measured
+chip powers, PREDICTS the next-step temperature, and adjusts a DVFS-style
+throttle to keep the package under the violation threshold (85 C per paper
+§5.4). Fully jittable — the controller adds two small GEMVs per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .dss import DSSModel
+
+
+class DTPMState(NamedTuple):
+    theta: jnp.ndarray       # (N,) thermal state
+    throttle: jnp.ndarray    # scalar in (0, 1]
+    violations: jnp.ndarray  # int32 counter
+
+
+@dataclasses.dataclass
+class ThermalManager:
+    dss: DSSModel
+    t_max: float = 85.0       # violation threshold (paper §5.4)
+    t_target: float = 80.0    # control setpoint
+    down: float = 0.88        # multiplicative backoff on predicted violation
+    up: float = 1.03          # recovery rate
+    min_throttle: float = 0.3
+
+    def init_state(self) -> DTPMState:
+        return DTPMState(theta=jnp.zeros((self.dss.n,), jnp.float32),
+                         throttle=jnp.ones((), jnp.float32),
+                         violations=jnp.zeros((), jnp.int32))
+
+    def update(self, state: DTPMState, chip_powers: jnp.ndarray):
+        """One control step. chip_powers (S,) watts at full speed.
+
+        Returns (new_state, info dict with temps/throttle/violation).
+        """
+        dss = self.dss
+        p_eff = chip_powers * state.throttle ** 2.5
+        theta = dss.ad @ state.theta + dss.bd @ p_eff
+        temps = dss.H @ theta + dss.t_ambient
+        t_now = jnp.max(temps)
+        # one-step-ahead prediction at current power (ZOH)
+        theta_pred = dss.ad @ theta + dss.bd @ p_eff
+        t_pred = jnp.max(dss.H @ theta_pred + dss.t_ambient)
+        hot = t_pred > self.t_target
+        new_throttle = jnp.where(hot, state.throttle * self.down,
+                                 jnp.minimum(1.0, state.throttle * self.up))
+        new_throttle = jnp.maximum(new_throttle, self.min_throttle)
+        violated = (t_now > self.t_max).astype(jnp.int32)
+        new_state = DTPMState(theta=theta, throttle=new_throttle,
+                              violations=state.violations + violated)
+        info = {"temps": temps, "t_max": t_now, "t_pred": t_pred,
+                "throttle": state.throttle, "violation": violated}
+        return new_state, info
+
+    def should_checkpoint(self, state: DTPMState,
+                          sustained: int = 50) -> bool:
+        """Pre-emptive checkpoint trigger: sustained violations mean the
+        package cannot be held under t_max even at min throttle — the
+        host should snapshot before a thermal trip (DESIGN.md §3)."""
+        return bool(state.violations >= sustained)
+
+    def run(self, powers_traj: jnp.ndarray):
+        """Roll the controller over a (T, S) power trace (jitted scan)."""
+
+        @jax.jit
+        def go(traj):
+            def body(st, p):
+                st, info = self.update(st, p)
+                return st, (info["t_max"], info["throttle"])
+
+            st, (tmax, thr) = jax.lax.scan(body, self.init_state(), traj)
+            return st, tmax, thr
+
+        return go(powers_traj)

@@ -1,0 +1,231 @@
+"""Finite-volume conduction solver — the golden reference model.
+
+Stands in for the paper's ANSYS Fluent FEM reference (DESIGN.md §2): solves
+the same governing PDE (paper Eq. 1)
+
+    div(k grad T) + qdot = rho Cv dT/dt
+
+on a structured voxel grid with harmonic-mean face conductances, per-voxel
+anisotropic conductivity, volumetric sources, and convection on both package
+boundaries. Implicit backward Euler; each step solved matrix-free with
+Jacobi-preconditioned CG under lax.scan — fully jitted.
+
+Two operating points:
+  * "abstracted FEM"   — mm-scale voxels over the full package (the
+                         accuracy reference for RC/DSS validation);
+  * "fine-grained FEM" — um-scale voxels resolving individual u-bumps on a
+                         sub-block (benchmarks/abstraction.py), used to fit
+                         homogenized layer conductivities via paper Eq. 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import Package
+
+
+@dataclasses.dataclass
+class VoxelModel:
+    # geometry
+    dx: float
+    dy: float
+    dz: np.ndarray            # (nz,) slab thicknesses
+    layer_of_slab: np.ndarray  # (nz,) package layer index per slab
+    # fields (nz, ny, nx)
+    cvol: jnp.ndarray         # heat capacity per voxel J/K
+    gx: jnp.ndarray           # (nz, ny, nx-1) face conductances W/K
+    gy: jnp.ndarray           # (nz, ny-1, nx)
+    gz: jnp.ndarray           # (nz-1, ny, nx)
+    conv: jnp.ndarray         # (nz, ny, nx) boundary convection W/K
+    src: jnp.ndarray          # (S, nz, ny, nx) power distribution (sums to 1)
+    obs: jnp.ndarray          # (n_obs, nz, ny, nx) observation weights
+    obs_tags: list
+    t_ambient: float
+
+    @property
+    def shape(self):
+        return self.cvol.shape
+
+    @property
+    def n_vox(self) -> int:
+        return int(np.prod(self.cvol.shape))
+
+
+def voxelize(pkg: Package, dx_target: float = 0.5e-3,
+             dz_target: float = 0.15e-3, max_slabs: int = 6) -> VoxelModel:
+    nx = max(2, int(round(pkg.length / dx_target)))
+    ny = max(2, int(round(pkg.width / dx_target)))
+    dx = pkg.length / nx
+    dy = pkg.width / ny
+    xc = (np.arange(nx) + 0.5) * dx
+    yc = (np.arange(ny) + 0.5) * dy
+
+    dz_list, layer_of_slab = [], []
+    for li, layer in enumerate(pkg.layers):
+        ns = min(max_slabs, max(1, int(round(layer.thickness / dz_target))))
+        dz_list += [layer.thickness / ns] * ns
+        layer_of_slab += [li] * ns
+    dz = np.array(dz_list)
+    nz = len(dz)
+
+    kx = np.zeros((nz, ny, nx))
+    ky = np.zeros((nz, ny, nx))
+    kz = np.zeros((nz, ny, nx))
+    cv = np.zeros((nz, ny, nx))
+    src_of = {}
+    XX, YY = np.meshgrid(xc, yc, indexing="xy")  # (ny, nx) with [y, x]
+
+    for z in range(nz):
+        layer = pkg.layers[layer_of_slab[z]]
+        m = layer.material
+        kx[z], ky[z], kz[z], cv[z] = m.kx, m.ky, m.kz, m.cv
+        for b in layer.blocks:
+            mask = (XX >= b.x0) & (XX < b.x1) & (YY >= b.y0) & (YY < b.y1)
+            kx[z][mask], ky[z][mask], kz[z][mask] = (b.material.kx,
+                                                     b.material.ky,
+                                                     b.material.kz)
+            cv[z][mask] = b.material.cv
+            if b.power_name is not None:
+                src_of.setdefault(b.power_name, []).append((z, mask))
+
+    source_names = sorted(src_of)
+    S = len(source_names)
+    src = np.zeros((S, nz, ny, nx))
+    for s, name in enumerate(source_names):
+        for z, mask in src_of[name]:
+            src[s, z][mask] = 1.0
+        src[s] /= max(src[s].sum(), 1e-30)
+
+    # observation: mean temperature over each tagged block's voxels
+    obs_tags, obs_list = [], []
+    for li, layer in enumerate(pkg.layers):
+        zsel = [z for z in range(nz) if layer_of_slab[z] == li]
+        for b in layer.blocks:
+            if not b.tag:
+                continue
+            w = np.zeros((nz, ny, nx))
+            mask = (XX >= b.x0) & (XX < b.x1) & (YY >= b.y0) & (YY < b.y1)
+            for z in zsel:
+                w[z][mask] = 1.0
+            obs_tags.append(b.tag)
+            obs_list.append(w / max(w.sum(), 1e-30))
+    obs = (np.stack(obs_list) if obs_list
+           else np.zeros((0, nz, ny, nx)))
+    order = np.argsort(obs_tags)
+    obs = obs[order]
+    obs_tags = [obs_tags[i] for i in order]
+
+    # face conductances (harmonic mean of half-cells)
+    dzc = dz[:, None, None]
+    gx = 1.0 / (0.5 * dx / (kx[:, :, :-1]) + 0.5 * dx / (kx[:, :, 1:])) \
+        * dy * dzc
+    gy = 1.0 / (0.5 * dy / (ky[:, :-1, :]) + 0.5 * dy / (ky[:, 1:, :])) \
+        * dx * dzc
+    rz = 0.5 * dz[:-1, None, None] / kz[:-1] + 0.5 * dz[1:, None, None] \
+        / kz[1:]
+    gz = (dx * dy) / rz
+
+    conv = np.zeros((nz, ny, nx))
+    conv[-1] += pkg.htc_top * dx * dy
+    conv[0] += pkg.htc_bottom * dx * dy
+
+    cvol = cv * dx * dy * dzc
+
+    f32 = lambda a: jnp.asarray(a, jnp.float32)
+    return VoxelModel(dx=dx, dy=dy, dz=dz,
+                      layer_of_slab=np.array(layer_of_slab),
+                      cvol=f32(cvol), gx=f32(gx), gy=f32(gy), gz=f32(gz),
+                      conv=f32(conv), src=f32(src), obs=f32(obs),
+                      obs_tags=obs_tags, t_ambient=pkg.t_ambient)
+
+
+class FVMReference:
+    """Jitted transient/steady conduction solver on a VoxelModel."""
+
+    def __init__(self, vm: VoxelModel, cg_tol: float = 1e-6,
+                 cg_maxiter: int = 400):
+        self.vm = vm
+        self.cg_tol = cg_tol
+        self.cg_maxiter = cg_maxiter
+        gx, gy, gz, conv = vm.gx, vm.gy, vm.gz, vm.conv
+        # diagonal of -L for Jacobi preconditioning
+        d = jnp.zeros_like(vm.cvol)
+        d = d.at[:, :, :-1].add(gx).at[:, :, 1:].add(gx)
+        d = d.at[:, :-1, :].add(gy).at[:, 1:, :].add(gy)
+        d = d.at[:-1].add(gz).at[1:].add(gz)
+        self._neg_l_diag = d + conv
+
+    def laplacian(self, theta: jnp.ndarray) -> jnp.ndarray:
+        """L theta (includes convection sink)."""
+        vm = self.vm
+        out = jnp.zeros_like(theta)
+        fx = vm.gx * (theta[:, :, 1:] - theta[:, :, :-1])
+        out = out.at[:, :, :-1].add(fx).at[:, :, 1:].add(-fx)
+        fy = vm.gy * (theta[:, 1:, :] - theta[:, :-1, :])
+        out = out.at[:, :-1, :].add(fy).at[:, 1:, :].add(-fy)
+        fz = vm.gz * (theta[1:] - theta[:-1])
+        out = out.at[:-1].add(fz).at[1:].add(-fz)
+        return out - vm.conv * theta
+
+    def _q_field(self, q_src: jnp.ndarray) -> jnp.ndarray:
+        return jnp.einsum("s,szyx->zyx", q_src.astype(jnp.float32),
+                          self.vm.src)
+
+    def steady_state(self, q_src: jnp.ndarray) -> jnp.ndarray:
+        """Solve -L theta = q; returns theta field."""
+        rhs = self._q_field(q_src)
+        diag = self._neg_l_diag
+
+        def mv(x):
+            return -self.laplacian(x)
+
+        sol, _ = jax.scipy.sparse.linalg.cg(
+            mv, rhs, tol=self.cg_tol, maxiter=self.cg_maxiter * 4,
+            M=lambda x: x / diag)
+        return sol
+
+    def make_simulator(self, dt: float):
+        """Jitted simulate(theta0, q_traj[T,S]) -> (obs_temps[T,n_obs],
+        theta_final)."""
+        vm = self.vm
+        cdt = vm.cvol / dt
+        diag = cdt + self._neg_l_diag
+        lap = self.laplacian
+        qf = self._q_field
+        tol, maxiter = self.cg_tol, self.cg_maxiter
+
+        def mv(x):
+            return cdt * x - lap(x)
+
+        @jax.jit
+        def simulate(theta0, q_traj):
+            def body(theta, q):
+                rhs = cdt * theta + qf(q)
+                th, _ = jax.scipy.sparse.linalg.cg(
+                    mv, rhs, x0=theta, tol=tol, maxiter=maxiter,
+                    M=lambda x: x / diag)
+                obs = jnp.einsum("ozyx,zyx->o", vm.obs, th)
+                return th, obs
+
+            thf, obs = jax.lax.scan(body, theta0.astype(jnp.float32), q_traj)
+            return obs + vm.t_ambient, thf
+
+        return simulate
+
+    def zero_state(self) -> jnp.ndarray:
+        return jnp.zeros(self.vm.shape, jnp.float32)
+
+    def slab_mean_temp(self, theta: jnp.ndarray, layer_idx: int,
+                       which: str = "all") -> float:
+        """Mean temperature of a package layer (interface studies)."""
+        zs = np.nonzero(self.vm.layer_of_slab == layer_idx)[0]
+        if which == "top":
+            zs = zs[-1:]
+        elif which == "bottom":
+            zs = zs[:1]
+        return float(jnp.mean(theta[jnp.asarray(zs)]) + self.vm.t_ambient)

@@ -1,0 +1,69 @@
+"""Step-cost -> chip-power mapping: glue between the LM framework's compiled
+steps and the MFIT thermal models (DESIGN.md §3).
+
+A compiled training/serving step has known FLOPs / HBM bytes / collective
+bytes (from the dry-run cost analysis). Given a step time and a throttle
+factor (DVFS emulation), this module produces per-chip electrical power,
+which drives the DSS model inside the training loop (core/dtpm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e-class chip (roofline constants per assignment)."""
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # B/s
+    ici_bw: float = 50e9             # B/s per link
+    p_idle: float = 55.0             # W static+idle
+    p_flops: float = 105.0           # W at 100% MXU occupancy
+    p_hbm: float = 28.0              # W at 100% HBM streaming
+    p_ici: float = 12.0              # W at 100% ICI utilization
+    tdp: float = 200.0               # W cap
+
+    @property
+    def p_max(self) -> float:
+        return min(self.tdp, self.p_idle + self.p_flops + self.p_hbm
+                   + self.p_ici)
+
+
+V5E = HardwareSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Per-chip cost of one compiled step (from dry-run artifacts)."""
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+
+    def roofline_time(self, hw: HardwareSpec = V5E) -> float:
+        """Lower-bound step time: max of the three roofline terms."""
+        return max(self.flops / hw.peak_flops,
+                   self.hbm_bytes / hw.hbm_bw,
+                   self.coll_bytes / hw.ici_bw)
+
+
+def chip_power(cost: StepCost, step_time: float, throttle: float = 1.0,
+               hw: HardwareSpec = V5E) -> float:
+    """Average electrical power of one chip over a step.
+
+    Utilization of each resource = achieved rate / peak rate; dynamic power
+    scales ~linearly with utilization and ~quadratically-ish with the DVFS
+    throttle (P ~ f V^2, V ~ f -> P ~ f^3; we use f^2.5 as a compromise
+    between core and uncore).
+    """
+    t = max(step_time, 1e-9)
+    u_flops = min(1.0, cost.flops / (hw.peak_flops * t))
+    u_hbm = min(1.0, cost.hbm_bytes / (hw.hbm_bw * t))
+    u_ici = min(1.0, cost.coll_bytes / (hw.ici_bw * t))
+    dyn = (hw.p_flops * u_flops + hw.p_hbm * u_hbm + hw.p_ici * u_ici)
+    return min(hw.tdp, hw.p_idle + dyn * throttle ** 2.5)
+
+
+def throttled_step_time(base_time: float, throttle: float) -> float:
+    """DVFS emulation: compute rate scales with clock."""
+    return base_time / max(throttle, 1e-3)

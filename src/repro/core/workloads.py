@@ -1,0 +1,160 @@
+"""Workload power-trace generators (paper §5.2.1, Table 7).
+
+WL1 is the synthetic trace of Fig. 9: full-power stress until >100 C, a
+pseudo-random bit sequence (PRBS) of per-chiplet power, then cooldown.
+
+WL2-WL6 reconstruct the paper's AI/ML job mixes: sequences of DNN inference
+jobs (ResNet/VGG/DenseNet on CIFAR-100 or ImageNet) mapped to chiplets as
+capacity frees up (paper: "a new NN is mapped to chiplets when it completes
+the execution of a previous NN"). NeuroSim/BookSim are unavailable offline,
+so per-job chiplet counts / durations / utilizations are plausible constants
+scaled by network size, with a compute/communication power split
+(DESIGN.md §9). Deterministic seeds make every trace reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# NN job catalog: chiplets needed, execution time (s), utilization.
+# ImageNet variants need more chiplets / run longer than CIFAR (I vs C).
+# ---------------------------------------------------------------------------
+_NN_CATALOG = {
+    # name: (chiplets, time_s, util)
+    "ResNet18": (1, 0.8, 0.85),
+    "ResNet34": (2, 1.2, 0.88),
+    "ResNet50": (3, 1.6, 0.90),
+    "ResNet101": (5, 2.5, 0.92),
+    "ResNet110": (5, 2.6, 0.92),
+    "ResNet150": (7, 3.2, 0.93),
+    "ResNet152": (7, 3.2, 0.93),
+    "VGG16": (4, 2.0, 0.95),
+    "VGG19": (5, 2.2, 0.95),
+    "DenseNet40": (1, 0.9, 0.82),
+    "DenseNet169": (6, 2.8, 0.90),
+}
+
+
+def _job(name: str, dataset: str):
+    c, t, u = _NN_CATALOG[name]
+    if dataset == "C":  # CIFAR-100: smaller inputs
+        c = max(1, c // 2)
+        t *= 0.6
+    return (name, dataset, c, t, u)
+
+
+def _rep(n, name, ds):
+    return [_job(name, ds)] * n
+
+
+# Table 7 compositions.
+_WORKLOADS = {
+    "WL2": (_rep(16, "ResNet34", "C") + _rep(1, "VGG19", "C")
+            + _rep(5, "ResNet50", "C") + _rep(3, "DenseNet40", "C")
+            + _rep(1, "ResNet152", "C") + _rep(1, "VGG19", "I")
+            + _rep(4, "ResNet34", "I") + _rep(1, "ResNet18", "I")
+            + _rep(1, "ResNet50", "I") + _rep(1, "VGG16", "I")),
+    "WL3": (_rep(16, "ResNet34", "I") + _rep(1, "VGG19", "I")
+            + _rep(5, "ResNet50", "I") + _rep(3, "DenseNet169", "I")
+            + _rep(1, "ResNet110", "I") + _rep(1, "VGG19", "I")
+            + _rep(4, "ResNet101", "I") + _rep(1, "ResNet152", "I")
+            + _rep(1, "ResNet18", "I") + _rep(1, "ResNet50", "I")
+            + _rep(1, "ResNet152", "I")),
+    "WL4": (_rep(16, "ResNet34", "C") + _rep(2, "VGG19", "I")
+            + _rep(4, "DenseNet169", "I") + _rep(3, "DenseNet40", "C")
+            + _rep(5, "ResNet50", "C") + _rep(3, "ResNet101", "I")
+            + _rep(7, "ResNet150", "I") + _rep(2, "VGG19", "I")
+            + _rep(4, "ResNet101", "I") + _rep(1, "VGG19", "C")),
+    "WL5": (_rep(16, "ResNet34", "I") + _rep(1, "ResNet152", "I")
+            + _rep(1, "ResNet110", "I") + _rep(3, "ResNet101", "I")
+            + _rep(9, "DenseNet169", "I") + _rep(4, "ResNet34", "I")
+            + _rep(12, "ResNet18", "I") + _rep(5, "ResNet50", "I")
+            + _rep(1, "ResNet152", "I")),
+    "WL6": (_rep(3, "DenseNet169", "I") + _rep(4, "ResNet34", "I")
+            + _rep(12, "ResNet18", "I") + _rep(4, "ResNet101", "I")
+            + _rep(2, "VGG19", "I") + _rep(4, "ResNet101", "I")
+            + _rep(1, "VGG19", "C") + _rep(3, "DenseNet40", "C")),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSpec:
+    p_max: float = 3.0       # W per chiplet at 100% util (2.5D, Table 6)
+    p_idle: float = 0.12     # W leakage/idle
+    comm_frac: float = 0.2   # fraction of active power spent on the router
+
+
+P2P5D = PowerSpec(p_max=3.0)
+P3D = PowerSpec(p_max=1.2)  # lower V/f point (paper §5.2.1)
+
+
+def wl1(n_chiplets: int, dt: float = 0.01, t_stress: float = 8.0,
+        t_prbs: float = 20.0, t_cool: float = 12.0,
+        prbs_bit: float = 0.5, spec: PowerSpec = P2P5D,
+        seed: int = 0) -> np.ndarray:
+    """Synthetic stress -> PRBS -> cooldown trace. Returns (T, S) watts."""
+    rng = np.random.default_rng(seed)
+    n_stress = int(round(t_stress / dt))
+    n_prbs = int(round(t_prbs / dt))
+    n_cool = int(round(t_cool / dt))
+    out = np.zeros((n_stress + n_prbs + n_cool, n_chiplets))
+    out[:n_stress] = spec.p_max
+    bit_len = max(1, int(round(prbs_bit / dt)))
+    n_bits = int(np.ceil(n_prbs / bit_len))
+    bits = rng.integers(0, 2, size=(n_bits, n_chiplets)).astype(np.float64)
+    prbs = np.repeat(bits, bit_len, axis=0)[:n_prbs]
+    p_lo = 0.25 * spec.p_max
+    out[n_stress:n_stress + n_prbs] = p_lo + prbs * (spec.p_max - p_lo)
+    # cooldown stays zero
+    return out
+
+
+def nn_workload(name: str, n_chiplets: int, dt: float = 0.01,
+                spec: PowerSpec = P2P5D, seed: int = 0,
+                time_scale: float = 1.0) -> np.ndarray:
+    """WL2-WL6: greedy first-fit job schedule -> per-chiplet power trace.
+
+    time_scale < 1 compresses job durations (used by tests/benchmarks to
+    keep CPU wall time sensible while preserving the schedule structure).
+    """
+    jobs = _WORKLOADS[name]
+    rng = np.random.default_rng(seed)
+    free_at = np.zeros(n_chiplets)  # time each chiplet becomes free
+    events = []  # (start, end, chiplet_ids, util)
+    t = 0.0
+    for (_, _, need, dur, util) in jobs:
+        need = min(need, n_chiplets)
+        dur = dur * time_scale
+        # wait until `need` chiplets are free
+        order = np.argsort(free_at)
+        start = max(t, float(free_at[order[need - 1]]))
+        chosen = order[:need]
+        end = start + dur
+        free_at[chosen] = end
+        # small per-job utilization jitter (workload variation)
+        u = util * float(rng.uniform(0.92, 1.0))
+        events.append((start, end, np.array(chosen), u))
+        t = start
+    total = float(free_at.max()) + 0.5
+    n_steps = int(np.ceil(total / dt))
+    out = np.full((n_steps, n_chiplets), spec.p_idle)
+    for start, end, chosen, u in events:
+        i0, i1 = int(start / dt), int(end / dt)
+        out[i0:i1, chosen] = spec.p_idle + u * (spec.p_max - spec.p_idle)
+    return out
+
+
+def get_workload(name: str, n_chiplets: int, dt: float = 0.01,
+                 spec: PowerSpec = P2P5D, seed: int = 0,
+                 time_scale: float = 1.0) -> np.ndarray:
+    if name == "WL1":
+        return wl1(n_chiplets, dt=dt, spec=spec, seed=seed,
+                   t_stress=8.0 * time_scale, t_prbs=20.0 * time_scale,
+                   t_cool=12.0 * time_scale)
+    return nn_workload(name, n_chiplets, dt=dt, spec=spec, seed=seed,
+                       time_scale=time_scale)
+
+
+ALL_WORKLOADS = ("WL1", "WL2", "WL3", "WL4", "WL5", "WL6")

@@ -1,0 +1,32 @@
+"""Elastic scaling: move a training state between meshes of different size.
+
+Checkpoints are saved unsharded per-host (ckpt/checkpoint.py), so scaling
+from N to M chips is: build the new mesh, recompute sharding rules for it,
+and device_put the restored pytree under the new shardings. Batch-size /
+microbatch bookkeeping adjusts so the global batch is preserved when the
+data-parallel degree changes (tokens-per-step invariance).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.lm import ArchConfig
+from .sharding import param_shardings
+
+
+def reshard_params(params, cfg: ArchConfig, new_mesh: Mesh,
+                   fsdp=None):
+    """Re-place a param (or optimizer-moment) pytree onto a new mesh."""
+    sh = param_shardings(params, cfg, new_mesh, fsdp=fsdp)
+    return jax.tree.map(jax.device_put, params, sh)
+
+
+def adjust_microbatch(global_batch: int, old_dp: int, new_dp: int,
+                      old_microbatch: int) -> int:
+    """Keep per-device live batch constant when DP degree changes."""
+    per_dev_live = global_batch // (old_dp * old_microbatch)
+    mb = max(1, global_batch // (new_dp * per_dev_live))
+    while global_batch % (new_dp * mb) != 0 and mb > 1:
+        mb -= 1
+    return mb

@@ -1,0 +1,205 @@
+"""GSPMD sharding rules: DP / FSDP(ZeRO-3) / TP / EP / SP layouts.
+
+Mesh axes (launch/mesh.py):
+  pod   — outermost data-parallel axis (cross-pod DCN/ICI)
+  data  — in-pod data parallel / FSDP axis
+  model — tensor parallel / expert parallel axis
+
+Param rules (by leaf name, ndim-aware):
+  column-parallel (out-features on `model`): wq wk wv w_up w_gate in_proj
+      wq_b wk_b wv_b img_proj conv_w
+  row-parallel    (in-features on `model`):  wo w_down out_proj
+  expert-parallel (expert dim on `model`):   moe w_up/w_gate/w_down (3D)
+  vocab-parallel:                            embed
+  head-parallel vectors:                     a_log dt_bias d_skip
+  replicated:                                norms, router, gates, biases
+
+FSDP (ZeRO-3): the remaining major dim of 2D+ weights additionally shards
+over `data`; optimizer moments inherit the same specs. Enabled per-arch for
+>=8B-param models.
+
+Decode KV caches shard batch over `data` and the cache LENGTH over `model`
+(uniform rule across GQA/MLA/hybrid archs — flash-decoding's partial-softmax
+combine falls out of GSPMD's sharded-softmax handling). Mamba states shard
+heads/channels over `model`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.lm import ArchConfig
+
+# leaf-name classes
+_COL = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj", "wq_b", "wk_b",
+        "wv_b", "img_proj", "wq_a"}
+_ROW = {"wo", "w_down", "out_proj"}
+_VEC_MODEL = {"a_log", "dt_bias", "d_skip"}
+_REPL = {"router", "wkv_a", "conv_b", "gate", "w", "b"}
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(f"[{k.idx}]")
+        else:
+            out.append(str(k))
+    return out
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _maybe(spec_axis, dim, mesh):
+    return spec_axis if _divisible(dim, mesh, spec_axis) else None
+
+
+def param_spec(path, leaf, mesh: Mesh, fsdp: bool,
+               serve: bool = False) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    stacked = "slots" in names or (
+        "encoder" in names and "slots" in names)
+    shape = leaf.shape
+    core = shape[1:] if stacked and len(shape) > 1 else shape
+    fs = None if serve else ("data" if fsdp else None)
+
+    def build(core_spec):
+        core_spec = tuple(
+            _maybe(ax, core[i], mesh) for i, ax in enumerate(core_spec))
+        if stacked and len(shape) > 1:
+            return P(None, *core_spec)
+        return P(*core_spec)
+
+    if name == "embed":
+        return P(_maybe("model", shape[0], mesh),
+                 _maybe(fs, shape[1], mesh))
+    if name in _VEC_MODEL and len(core) == 1:
+        return build(("model",))
+    if name == "conv_w" and len(core) == 2:
+        return build((None, "model"))
+    if name in _COL:
+        if len(core) == 3:      # MoE stacked experts (E, D, F)
+            # serve: shard the FFN hidden dim F over `data` so expert
+            # weights stay resident (no per-step gathers); the combine
+            # psum is activation-sized (~MBs), 100x cheaper at decode
+            return build(("model", None, "data") if serve
+                         else ("model", fs, None))
+        if len(core) == 2:
+            return build((fs, "model"))
+        return build((None,) * len(core))
+    if name in _ROW:
+        if len(core) == 3:      # MoE (E, F, D)
+            return build(("model", "data", None) if serve
+                         else ("model", None, fs))
+        if len(core) == 2:
+            return build(("model", fs))
+        return build((None,) * len(core))
+    # norms, router, biases, everything else: replicated
+    return build((None,) * len(core))
+
+
+def param_shardings(params_spec, cfg: ArchConfig, mesh: Mesh,
+                    fsdp: Optional[bool] = None, serve: bool = False):
+    """Pytree of NamedShardings matching a params (or opt-moment) pytree.
+
+    serve=True selects the inference layout: bf16 weights replicated over
+    the DP axes (they fit once fp32 masters/moments are gone) EXCEPT MoE
+    expert FFNs, whose hidden dim shards over `data` (see param_spec)."""
+    if fsdp is None:
+        fsdp = arch_wants_fsdp(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp, serve)), params_spec)
+
+
+def arch_wants_fsdp(cfg: ArchConfig) -> bool:
+    big = {"deepseek-coder-33b", "qwen3-moe-235b-a22b",
+           "llama4-scout-17b-a16e", "nemotron-4-15b",
+           "llama-3.2-vision-11b"}
+    return cfg.arch_id in big
+
+
+# ---------------------------------------------------------------------------
+# activation / cache shardings
+# ---------------------------------------------------------------------------
+def batch_spec(batch: int, mesh: Mesh) -> tuple:
+    """Shard batch over (pod, data) when divisible, else replicate."""
+    axes = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return axes if (axes and batch % size == 0) else None
+
+
+def token_sharding(batch: int, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_spec(batch, mesh), None))
+
+
+def cache_shardings(caches_spec, cfg: ArchConfig, mesh: Mesh, batch: int):
+    """KV caches: batch->data axes, cache length->model (SP decode);
+    Mamba states: heads/channels->model."""
+    bs = batch_spec(batch, mesh)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if name == "len":
+            return P()
+        if name == "memory":                    # (B, M, D)
+            return P(bs, None, None)
+        # everything below is stacked over groups: leading G dim
+        if name in ("k", "v"):                  # (G, B, L, KV, HD)
+            lspec = _maybe("model", shape[2], mesh)
+            return P(None, bs, lspec, None, None)
+        if name == "latent":                    # (G, B, L, C)
+            lspec = _maybe("model", shape[2], mesh)
+            return P(None, bs, lspec, None)
+        if name == "ssm":                       # (G, B, H, P, N)
+            return P(None, bs, _maybe("model", shape[2], mesh), None, None)
+        if name == "conv":                      # (G, B, W-1, d_inner)
+            return P(None, bs, None, _maybe("model", shape[3], mesh))
+        if name == "conv_bc":                   # (G, B, W-1, 2GN) replicated
+            return P(None, bs, None, None)
+        return P(*([None] * len(shape)))
+
+    def fix_tail(path, leaf):
+        # tail caches are unstacked: same rules minus the leading G dim
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if "tail" in names:
+            if name in ("k", "v"):
+                return P(bs, _maybe("model", shape[1], mesh), None, None)
+            if name == "latent":
+                return P(bs, _maybe("model", shape[1], mesh), None)
+            if name == "ssm":
+                return P(bs, _maybe("model", shape[1], mesh), None, None)
+            if name == "conv":
+                return P(bs, None, _maybe("model", shape[2], mesh))
+            if name == "conv_bc":
+                return P(bs, None, None)
+        return spec_for(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, fix_tail(path, leaf)),
+        caches_spec)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

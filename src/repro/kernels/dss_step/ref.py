@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the DSS step kernel.
+
+The DSS model (paper Eq. 14) advances a batch of thermal traces:
+
+    theta' = theta @ Ad^T + q @ Bd^T
+
+with theta (B, N), Ad (N, N), q (B, S), Bd (N, S). The fused single-GEMM
+formulation concatenates [theta | q] @ [Ad^T ; Bd^T] — mathematically
+identical, and what the Pallas kernel implements.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dss_step_ref(theta: jnp.ndarray, q: jnp.ndarray, ad_t: jnp.ndarray,
+                 bd_t: jnp.ndarray) -> jnp.ndarray:
+    """theta (B,N) @ ad_t (N,N) + q (B,S) @ bd_t (S,N) in fp32."""
+    acc = jnp.dot(theta.astype(jnp.float32), ad_t.astype(jnp.float32))
+    acc = acc + jnp.dot(q.astype(jnp.float32), bd_t.astype(jnp.float32))
+    return acc.astype(theta.dtype)
+
+
+def fused_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain X @ W oracle for the underlying blocked-matmul kernel."""
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Two references:
+  ssd_ref         — naive sequential recurrence (the definition; oracle for
+                    correctness tests)
+  ssd_chunked_jnp — chunked/blocked SSD (same math as the Pallas kernel but
+                    in plain einsums; the 'xla' backend used on CPU and in
+                    the dry-run)
+
+Shapes (Mamba2 conventions):
+  x  (B, L, H, P)  inner activations split into H heads of dim P
+  dt (B, L, H)     positive step sizes (softplus applied by the model)
+  A  (H,)          negative per-head decay rates
+  Bm (B, L, G, N)  input projections, G groups shared across H heads
+  Cm (B, L, G, N)  output projections
+Returns y (B, L, H, P) and the final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(m: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B, L, G, N) -> (B, L, H, N) by repeating each group."""
+    g = m.shape[2]
+    assert h % g == 0, (h, g)
+    return jnp.repeat(m, h // g, axis=2)
+
+
+def ssd_ref(x, dt, a, bm, cm, init_state=None):
+    """Naive recurrence: S_t = exp(dt_t a) S_{t-1} + B_t (dt_t x_t)^T."""
+    b, l, h, p = x.shape
+    n = bm.shape[-1]
+    bm = _expand_groups(bm, h).astype(jnp.float32)
+    cm = _expand_groups(cm, h).astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    da = jnp.exp(dt * a.astype(jnp.float32))            # (B, L, H)
+    xbar = x * dt[..., None]                            # (B, L, H, P)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        da_t, xb_t, b_t, c_t = inp
+        s = da_t[..., None, None] * s + jnp.einsum("bhp,bhn->bhpn", xb_t,
+                                                   b_t)
+        y_t = jnp.einsum("bhpn,bhn->bhp", s, c_t)
+        return s, y_t
+
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(xbar, 1, 0),
+          jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_fin
+
+
+def _segsum(a_chunk: jnp.ndarray) -> jnp.ndarray:
+    """a (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} a_k for
+    i >= j, -inf above the diagonal (so exp() gives the decay weights)."""
+    q = a_chunk.shape[-1]
+    cum = jnp.cumsum(a_chunk, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_jnp(x, dt, a, bm, cm, chunk: int = 64, init_state=None):
+    """Chunked SSD: intra-chunk attention-like term + inter-chunk state
+    recurrence. Identical math to the Pallas kernel."""
+    b, l, h, p = x.shape
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    n = bm.shape[-1]
+    bm = _expand_groups(bm, h).astype(jnp.float32)
+    cm = _expand_groups(cm, h).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xbar = x.astype(jnp.float32) * dtf[..., None]
+    alog = dtf * a.astype(jnp.float32)                  # (B, L, H)
+
+    def r(t, extra=()):  # (B, L, ...) -> (B, nc, Q, ...)
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, bc, cc, ac = r(xbar), r(bm), r(cm), r(alog)
+    acum = jnp.cumsum(ac, axis=2)                       # (B, nc, Q, H)
+    seg = _segsum(jnp.moveaxis(ac, 3, 2))               # (B, nc, H, Q, Q)
+    lmat = jnp.exp(seg)
+    # intra-chunk (diagonal) term
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * lmat, xc)
+    # chunk summary states: S_c = sum_j exp(A_tot - A_cum_j) B_j xbar_j^T
+    a_tot = acum[:, :, -1]                              # (B, nc, H)
+    decay = jnp.exp(a_tot[:, :, None] - acum)           # (B, nc, Q, H)
+    s_chunk = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bc, decay, xc)
+    # inter-chunk recurrence over nc
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        a_t, s_c = inp
+        s_new = jnp.exp(a_t)[..., None, None] * s + s_c
+        return s_new, s  # emit state ENTERING the chunk
+
+    s_fin, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                     # (B, nc, H, P, N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, s_in, jnp.exp(acum))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_decode_step(state, x_t, dt_t, a, b_t, c_t):
+    """Single-token SSD update for serving.
+
+    state (B, H, P, N), x_t (B, H, P), dt_t (B, H), b_t/c_t (B, G, N).
+    Returns (y_t (B, H, P), new_state).
+    """
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    b_h = jnp.repeat(b_t, rep, axis=1).astype(jnp.float32)
+    c_h = jnp.repeat(c_t, rep, axis=1).astype(jnp.float32)
+    da = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32))
+    xb = x_t.astype(jnp.float32) * dt_t[..., None]
+    s = da[..., None, None] * state + jnp.einsum("bhp,bhn->bhpn", xb, b_h)
+    y = jnp.einsum("bhpn,bhn->bhp", s, c_h)
+    return y.astype(x_t.dtype), s

@@ -1,0 +1,409 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below runs with 512 placeholder devices -------------------
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,  # noqa: E402
+                           param_specs, shape_applicable)
+from repro.distribution.sharding import (batch_spec, cache_shardings,  # noqa: E402
+                                         param_shardings, replicated,
+                                         token_sharding)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm as lm_mod  # noqa: E402
+from repro.models.lm import _apply_kind, _SHARED_KINDS  # noqa: E402
+from repro.training.optim import init_opt_state  # noqa: E402
+from repro.training.steps import (TrainConfig, make_prefill_step,  # noqa: E402
+                                  make_serve_step, make_train_step)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind (post-SPMD per-device
+    module; while bodies count once, consistent with cost_analysis)."""
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes"]
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(ma, k, 0) or 0)
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# group-body lowering (roofline trip-count correction; DESIGN.md §7):
+# cost_analysis counts a while body ONCE, so per-cell totals are
+#   full_module_cost + (groups - 1) * group_body_cost  (per stack)
+# ---------------------------------------------------------------------------
+def _strip_stack(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+
+
+def _body_fn(cfg, kinds, mode, shared_params_spec):
+    def apply_group(x, slot_params, caches, shared, pos):
+        ctx = {"positions": (jnp.arange(x.shape[1])[None, :]
+                             if mode != "decode"
+                             else jnp.full((1, 1), pos, jnp.int32)),
+               "pos": pos, "backend": "xla",
+               "memory": None}
+        new_caches = []
+        for si, kind in enumerate(kinds):
+            if kind == "cross":   # memory handled via closure-free stub
+                new_caches.append({})
+                continue
+            p = shared[kind] if kind in _SHARED_KINDS else slot_params[si]
+            c = caches[si] if caches is not None else None
+            x, nc, _ = _apply_kind(kind, p, cfg, x, ctx, c, mode)
+            new_caches.append(nc if nc is not None else {})
+        return x, new_caches
+
+    return apply_group
+
+
+def lower_group_body(cfg, shape_name, mesh, mode, batch, seq):
+    """Lower ONE group body under the cell's shardings; return its costs."""
+    groups, kinds, tail = cfg.pattern()
+    pspecs = param_specs(cfg)
+    if mode != "train":
+        pspecs = _bf16_specs(pspecs)
+        shard_all = param_shardings(pspecs, cfg, mesh, serve=True)
+    else:
+        shard_all = param_shardings(pspecs, cfg, mesh)
+    slot_specs = [None if s is None else _strip_stack(s)
+                  for s in pspecs["slots"]]
+    slot_shard = [None if s is None else
+                  jax.tree.map(lambda ns: NamedSharding(
+                      ns.mesh, P(*ns.spec[1:])), s)
+                  for s in shard_all["slots"]]
+    shared_specs = {k: pspecs[k] for k in _SHARED_KINDS if k in pspecs}
+    shared_shard = {k: shard_all[k] for k in _SHARED_KINDS if k in pspecs}
+    bs = batch_spec(batch, mesh)
+    if mode == "decode":
+        x_spec = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        x_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                      jnp.bfloat16)
+    x_shard = NamedSharding(mesh, P(bs, None, None))
+    cache_specs = None
+    cache_shard = None
+    if mode in ("prefill", "decode"):
+        full_caches = jax.eval_shape(
+            partial(lm_mod.make_caches, cfg, batch, seq))
+        cs = cache_shardings(full_caches, cfg, mesh, batch)
+        cache_specs = [_strip_stack(c) for c in full_caches["slots"]]
+        cache_shard = [jax.tree.map(lambda ns: NamedSharding(
+            ns.mesh, P(*ns.spec[1:])), c) for c in cs["slots"]]
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    body = _body_fn(cfg, kinds, mode, shared_specs)
+    if mode == "train":
+        def fn(x, sp, sh, pos, ct):
+            y, vjp = jax.vjp(
+                lambda x_, sp_: jax.checkpoint(body)(x_, sp_, None, sh,
+                                                     pos)[0], x, sp)
+            dx, dsp = vjp(ct)
+            return y, dx, dsp
+
+        lowered = jax.jit(fn, in_shardings=(
+            x_shard, slot_shard, shared_shard, replicated(mesh),
+            x_shard)).lower(x_spec, slot_specs, shared_specs, pos_spec,
+                            x_spec)
+    else:
+        def fn(x, sp, cs_, sh, pos):
+            return body(x, sp, cs_, sh, pos)
+
+        lowered = jax.jit(fn, in_shardings=(
+            x_shard, slot_shard, cache_shard, shared_shard,
+            replicated(mesh))).lower(x_spec, slot_specs, cache_specs,
+                                     shared_specs, pos_spec)
+    compiled = lowered.compile()
+    cost = _cost_dict(compiled)
+    coll = parse_collective_bytes(compiled.as_text())
+    return {"cost": cost, "coll": coll, "groups": groups}
+
+
+# ---------------------------------------------------------------------------
+# full-cell lowering
+# ---------------------------------------------------------------------------
+def _bf16_specs(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        tree)
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               with_body: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch_id)
+    spec = SHAPES[shape_name]
+    mode, seq, batch = spec["mode"], spec["seq"], spec["batch"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    pspecs = param_specs(cfg)
+    if mode != "train":
+        # serving layout (EXPERIMENTS.md §Perf I7): bf16 weights,
+        # replicated over DP (fits once masters/moments are gone) except
+        # MoE expert FFNs, whose hidden dim shards over `data` — weights
+        # stay resident AND no per-step gathers (the combine is an
+        # activation-sized psum).
+        pspecs = _bf16_specs(pspecs)
+        p_shard = param_shardings(pspecs, cfg, mesh, serve=True)
+    else:
+        p_shard = param_shardings(pspecs, cfg, mesh)
+    ins = input_specs(cfg, shape_name)
+    rec = {"arch": arch_id, "shape": shape_name,
+           "multi_pod": bool(multi_pod), "mode": mode,
+           "mesh": list(mesh.devices.shape), "batch": batch, "seq": seq}
+
+    with mesh:
+        if mode == "train":
+            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            # microbatch count sized so the saved-carry stack
+            # (groups x ubatch x seq x d_model x 2B) stays under ~4 GiB/dev
+            groups = cfg.pattern()[0]
+            dp_size = 1
+            for a in dp:
+                dp_size *= mesh.shape[a]
+            carry_bytes = groups * (batch // dp_size) * seq \
+                * cfg.d_model * 2
+            mb = 1
+            while mb < batch // dp_size and carry_bytes / mb > 4 * 2**30:
+                mb *= 2
+            tcfg = TrainConfig(backend="xla", microbatch=mb, dp_axes=dp,
+                               grad_compress=multi_pod)
+            rec["microbatch"] = mb
+            step = make_train_step(cfg, tcfg)
+            opt_specs = jax.eval_shape(init_opt_state, pspecs)
+            opt_shard = {"m": p_shard, "v": p_shard,
+                         "step": replicated(mesh)}
+            bshard = {"tokens": token_sharding(batch, mesh),
+                      "labels": token_sharding(batch, mesh)}
+            bspecs = {"tokens": ins["tokens"], "labels": ins["labels"]}
+            bs = batch_spec(batch, mesh)
+            if "img" in ins:
+                bspecs["img"] = ins["img"]
+                bshard["img"] = NamedSharding(mesh, P(bs, None, None))
+            if "frames" in ins:
+                bspecs["frames"] = ins["frames"]
+                bshard["frames"] = NamedSharding(mesh, P(bs, None, None))
+            metr_shard = {k: replicated(mesh) for k in
+                          ("loss", "aux", "lr", "grad_norm")}
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, bshard),
+                out_shardings=(p_shard, opt_shard, metr_shard),
+                donate_argnums=(0, 1),
+            ).lower(pspecs, opt_specs, bspecs)
+        elif mode == "prefill":
+            step = make_prefill_step(cfg, lmax=seq, backend="xla")
+            bs = batch_spec(batch, mesh)
+            in_sh = {"tokens": token_sharding(batch, mesh)}
+            if "img" in ins:
+                in_sh["img"] = NamedSharding(mesh, P(bs, None, None))
+            if "frames" in ins:
+                in_sh["frames"] = NamedSharding(mesh, P(bs, None, None))
+            caches_spec = jax.eval_shape(
+                partial(lm_mod.make_caches, cfg, batch, seq))
+            out_caches = dict_cache_shard = cache_shardings(
+                _prefill_out_spec(cfg, caches_spec), cfg, mesh, batch)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, in_sh),
+                out_shardings=(NamedSharding(mesh, P(bs, "model")),
+                               dict_cache_shard),
+            ).lower(pspecs, {k: v for k, v in ins.items()})
+        else:  # decode
+            step = make_serve_step(cfg, backend="xla")
+            bs = batch_spec(batch, mesh)
+            caches_spec = ins["caches"]
+            c_shard = cache_shardings(caches_spec, cfg, mesh, batch)
+            tok_shard = NamedSharding(mesh, P(bs))
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, tok_shard, c_shard),
+                out_shardings=(NamedSharding(mesh, P(bs, "model")),
+                               c_shard),
+                donate_argnums=(2,),
+            ).lower(pspecs, ins["token"], caches_spec)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["memory"] = _mem_dict(compiled)
+    full_cost = _cost_dict(compiled)
+    full_coll = parse_collective_bytes(compiled.as_text())
+    rec["full_cost"] = full_cost
+    rec["full_coll"] = full_coll
+
+    if with_body:
+        groups, kinds, tail = cfg.pattern()
+        body = lower_group_body(cfg, shape_name, mesh, mode, batch, seq)
+        rec["body"] = body
+        mult = groups - 1
+        total_flops = full_cost["flops"] + mult * body["cost"]["flops"]
+        total_bytes = full_cost["bytes"] + mult * body["cost"]["bytes"]
+        total_coll = full_coll.get("total", 0) \
+            + mult * body["coll"].get("total", 0)
+        if cfg.family == "audio" and mode != "decode":
+            entry = lower_encoder_body(cfg, mesh, batch)
+            rec["enc_body"] = entry
+            total_flops += (cfg.n_enc_layers - 1) * entry["cost"]["flops"]
+            total_bytes += (cfg.n_enc_layers - 1) * entry["cost"]["bytes"]
+            total_coll += (cfg.n_enc_layers - 1) \
+                * entry["coll"].get("total", 0)
+        rec["totals"] = {"flops": total_flops, "bytes": total_bytes,
+                         "coll_bytes": total_coll}
+    if verbose:
+        mem_gb = rec["memory"]["total_hbm_bytes"] / 2**30
+        print(f"[dryrun] {arch_id:24s} {shape_name:12s} "
+              f"mesh={rec['mesh']} compile={t_compile:6.1f}s "
+              f"mem/dev={mem_gb:7.2f}GiB "
+              f"flops/dev={rec.get('totals', full_cost)['flops']:.3e}",
+              flush=True)
+    return rec
+
+
+def _prefill_out_spec(cfg, caches_spec):
+    return caches_spec
+
+
+def lower_encoder_body(cfg, mesh, batch):
+    """Whisper encoder group body (second scan stack)."""
+    pspecs = param_specs(cfg)
+    enc = pspecs["encoder"]
+    slot_specs = [_strip_stack(s) for s in enc["slots"]]
+    shard_all = param_shardings(pspecs, cfg, mesh)
+    slot_shard = [jax.tree.map(lambda ns: NamedSharding(
+        ns.mesh, P(*ns.spec[1:])), s)
+        for s in shard_all["encoder"]["slots"]]
+    x_spec = jax.ShapeDtypeStruct((batch, cfg.n_audio_ctx, cfg.d_model),
+                                  jnp.bfloat16)
+    bs = batch_spec(batch, mesh)
+    x_shard = NamedSharding(mesh, P(bs, None, None))
+    body = _body_fn(cfg, ("enc_attn", "mlp"), "train", {})
+
+    def fn(x, sp, ct):
+        y, vjp = jax.vjp(
+            lambda x_, sp_: jax.checkpoint(body)(
+                x_, sp_, None, {}, jnp.zeros((), jnp.int32))[0], x, sp)
+        dx, dsp = vjp(ct)
+        return y, dx, dsp
+
+    lowered = jax.jit(fn, in_shardings=(x_shard, slot_shard, x_shard)) \
+        .lower(x_spec, slot_specs, x_spec)
+    compiled = lowered.compile()
+    return {"cost": _cost_dict(compiled),
+            "coll": parse_collective_bytes(compiled.as_text())}
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            yield arch, shape, shape_applicable(cfg, shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-body", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape, ok in all_cells():
+        if args.arch not in ("all", arch) or \
+                args.shape not in ("all", shape):
+            continue
+        if not ok:
+            print(f"[dryrun] {arch:24s} {shape:12s} SKIP "
+                  f"(full-attention arch; documented in DESIGN.md)",
+                  flush=True)
+            continue
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] {tag} cached", flush=True)
+                continue
+            try:
+                rec = lower_cell(arch, shape, mp,
+                                 with_body=not args.no_body)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, repr(e)[:300]))
+                print(f"[dryrun] FAIL {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,469 @@
+"""Unified LM engine for all assigned architectures.
+
+An architecture is a repeating GROUP of block slots scanned over `groups`
+repetitions (+ an optional tail), e.g.:
+
+  dense       1 group slot pattern ('attn', 'mlp') x n_layers
+  moe         ('attn', 'moe') x n_layers
+  ssm         ('mamba',) x n_layers
+  hybrid      ('mamba',)*5 + ('shared_attn',) x 13 groups, tail 3x mamba
+              (zamba2 weight-shared attention block)
+  vlm         (('attn','mlp') x 4 + ('cross','mlp')) x 8 groups
+  audio       encoder ('enc_attn','mlp') x n_enc; decoder
+              ('attn','cross','mlp') x n_layers
+
+Per-slot parameters are stacked over groups and consumed by lax.scan
+(keeps HLO size O(1) in depth — essential for 62-94 layer dry-runs).
+Shared kinds ('shared_attn') keep ONE param set applied at every group.
+
+Three modes share the block implementations:
+  train    — full-sequence causal, no caches, remat per group
+  prefill  — full sequence in, caches out (+ last-position logits)
+  decode   — one token in, caches updated in place
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (AttnCfg, MLACfg, Pytree, apply_norm, attn_apply, hint,
+                     attn_cache_spec, attn_init, dense_init, embed_init,
+                     mla_apply, mla_cache_spec, mla_init, mlp_apply,
+                     mlp_init, norm_init)
+from .mamba import (MambaCfg, mamba_apply, mamba_cache_spec, mamba_decode,
+                    mamba_init)
+from .moe import MoECfg, moe_apply, moe_init
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                 # dense | ssm | moe | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv: int = 0
+    d_ff: int = 0
+    head_dim: int = 0
+    act: str = "swiglu"
+    norm: str = "rms"
+    attn_kind: str = "gqa"      # gqa | mla
+    rope_theta: float = 500000.0
+    # MLA (minicpm3)
+    q_lora: int = 0
+    kv_lora: int = 0
+    nope_dim: int = 0
+    rope_dim: int = 0
+    v_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    moe_cf: float = 1.25        # expert capacity factor
+    # SSM
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 64
+    # hybrid: one shared attn block applied every `hybrid_period`-th slot
+    hybrid_period: int = 0
+    # vlm
+    cross_every: int = 0
+    n_img_tokens: int = 0
+    d_img: int = 0
+    # audio enc-dec
+    n_enc_layers: int = 0
+    n_audio_ctx: int = 0
+    # long-context support marker (sub-quadratic context path)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab, 256)
+
+    # ---- pattern -----------------------------------------------------------
+    def pattern(self) -> tuple:
+        """(groups, slot_kinds, tail_kinds)."""
+        f = self.family
+        if f in ("dense",):
+            return self.n_layers, ("attn", "mlp"), ()
+        if f == "moe":
+            return self.n_layers, ("attn", "moe"), ()
+        if f == "ssm":
+            return self.n_layers, ("mamba",), ()
+        if f == "hybrid":
+            p = self.hybrid_period
+            groups = self.n_layers // p
+            tail = ("mamba",) * (self.n_layers - groups * p)
+            # Zamba2: the shared transformer block (attn + MLP, one weight
+            # set reused at every application) follows p-1 Mamba2 blocks
+            return groups, (("mamba",) * (p - 1)
+                            + ("shared_attn", "shared_mlp")), tail
+        if f == "vlm":
+            ce = self.cross_every
+            groups = self.n_layers // ce
+            kinds = ("attn", "mlp") * (ce - 1) + ("cross", "mlp")
+            return groups, kinds, ()
+        if f == "audio":  # decoder pattern; encoder handled separately
+            return self.n_layers, ("attn", "cross", "mlp"), ()
+        raise ValueError(f)
+
+    def attn_cfg(self, causal: bool = True, use_rope: bool = True
+                 ) -> AttnCfg:
+        return AttnCfg(self.d_model, self.n_heads, self.n_kv, self.hd,
+                       self.rope_theta, self.norm, causal, use_rope)
+
+    def mla_cfg(self) -> MLACfg:
+        return MLACfg(self.d_model, self.n_heads, self.q_lora, self.kv_lora,
+                      self.nope_dim, self.rope_dim, self.v_dim,
+                      self.rope_theta, self.norm)
+
+    def moe_cfg(self) -> MoECfg:
+        return MoECfg(self.d_model, self.d_ff, self.n_experts, self.top_k,
+                      self.shared_expert, self.d_ff,
+                      capacity_factor=self.moe_cf, act=self.act,
+                      norm=self.norm)
+
+    def mamba_cfg(self) -> MambaCfg:
+        return MambaCfg(self.d_model, self.ssm_state, self.ssm_head_dim,
+                        n_groups=self.ssm_groups, norm=self.norm,
+                        chunk=self.ssm_chunk)
+
+
+# ---------------------------------------------------------------------------
+# block kind registry
+# ---------------------------------------------------------------------------
+_SHARED_KINDS = {"shared_attn": "attn", "shared_mlp": "mlp"}
+
+
+def _init_kind(kind: str, key, cfg: ArchConfig) -> Pytree:
+    if kind in ("attn", "shared_attn"):
+        if cfg.attn_kind == "mla":
+            return mla_init(key, cfg.mla_cfg())
+        return attn_init(key, cfg.attn_cfg())
+    if kind == "enc_attn":
+        return attn_init(key, cfg.attn_cfg(causal=False, use_rope=False))
+    if kind == "cross":
+        p = attn_init(key, cfg.attn_cfg(causal=False, use_rope=False))
+        p["gate"] = jnp.zeros((), jnp.float32)
+        return p
+    if kind in ("mlp", "shared_mlp"):
+        return mlp_init(key, cfg.d_model, cfg.d_ff, cfg.act, cfg.norm)
+    if kind == "moe":
+        return moe_init(key, cfg.moe_cfg())
+    if kind == "mamba":
+        return mamba_init(key, cfg.mamba_cfg())
+    raise ValueError(kind)
+
+
+def _cache_spec_kind(kind: str, cfg: ArchConfig, batch: int, lmax: int):
+    if kind in ("attn", "shared_attn"):
+        if cfg.attn_kind == "mla":
+            return mla_cache_spec(cfg.mla_cfg(), batch, lmax)
+        return attn_cache_spec(cfg.attn_cfg(), batch, lmax)
+    if kind == "mamba":
+        return mamba_cache_spec(cfg.mamba_cfg(), batch)
+    return {}  # mlp / moe / cross / enc_attn are cacheless
+
+
+def _apply_kind(kind: str, p: Pytree, cfg: ArchConfig, x, ctx: dict,
+                cache, mode: str):
+    """Returns (x_new, new_cache, aux)."""
+    backend = ctx.get("backend", "auto")
+    if kind in ("attn", "shared_attn", "enc_attn"):
+        causal = kind != "enc_attn"
+        if cfg.attn_kind == "mla" and kind != "enc_attn":
+            if mode == "train":
+                out, nc = mla_apply(p, cfg.mla_cfg(), x, ctx["positions"])
+            elif mode == "prefill":
+                out, nc = mla_apply(p, cfg.mla_cfg(), x, ctx["positions"],
+                                    cache=cache)
+            else:
+                out, nc = mla_apply(p, cfg.mla_cfg(), x, ctx["positions"],
+                                    cache=cache, cache_len=ctx["pos"])
+        else:
+            acfg = cfg.attn_cfg(causal=causal, use_rope=causal)
+            if mode == "train":
+                out, nc = attn_apply(p, acfg, x, ctx["positions"],
+                                     backend=backend)
+            elif mode == "prefill":
+                out, nc = attn_apply(p, acfg, x, ctx["positions"],
+                                     cache=cache)
+            else:
+                out, nc = attn_apply(p, acfg, x, ctx["positions"],
+                                     cache=cache, cache_len=ctx["pos"])
+        return x + out, (nc if nc is not None else cache), 0.0
+    if kind == "cross":
+        acfg = cfg.attn_cfg(causal=False, use_rope=False)
+        out, _ = attn_apply(p, acfg, x, ctx["positions"],
+                            kv_x=ctx["memory"])
+        return x + jnp.tanh(p["gate"]).astype(x.dtype) * out, cache, 0.0
+    if kind in ("mlp", "shared_mlp"):
+        return x + mlp_apply(p, x, cfg.act, cfg.norm), cache, 0.0
+    if kind == "moe":
+        out, aux = moe_apply(p, cfg.moe_cfg(), x)
+        return x + out, cache, aux
+    if kind == "mamba":
+        if mode == "decode":
+            out, nc = mamba_decode(p, cfg.mamba_cfg(), x, cache)
+            return x + out, nc, 0.0
+        out, state = mamba_apply(p, cfg.mamba_cfg(), x, backend=backend)
+        nc = state if mode == "prefill" else cache
+        return x + out, nc, 0.0
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key) -> Pytree:
+    groups, kinds, tail = cfg.pattern()
+    n_stream = len([k for k in kinds if k != "shared_attn"])
+    keys = jax.random.split(key, 8)
+    params: Pytree = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    # stacked per-slot params
+    slot_params = []
+    for si, kind in enumerate(kinds):
+        if kind in _SHARED_KINDS:
+            slot_params.append(None)
+            continue
+        ks = jax.random.split(jax.random.fold_in(keys[1], si), groups)
+        slot_params.append(jax.vmap(lambda k, _kind=kind:
+                                    _init_kind(_kind, k, cfg))(ks))
+    params["slots"] = slot_params
+    for si, kind in enumerate(kinds):
+        if kind in _SHARED_KINDS and kind not in params:
+            params[kind] = _init_kind(kind, jax.random.fold_in(keys[2], si),
+                                      cfg)
+    if tail:
+        params["tail"] = [
+            _init_kind(k, jax.random.fold_in(keys[3], i), cfg)
+            for i, k in enumerate(tail)]
+    if cfg.family == "vlm":
+        params["img_proj"] = dense_init(keys[4], cfg.d_img, cfg.d_model)
+    if cfg.family == "audio":
+        enc_kinds = ("enc_attn", "mlp")
+        enc_slots = []
+        for si, kind in enumerate(enc_kinds):
+            ks = jax.random.split(jax.random.fold_in(keys[5], si),
+                                  cfg.n_enc_layers)
+            enc_slots.append(jax.vmap(lambda k, _kind=kind:
+                                      _init_kind(_kind, k, cfg))(ks))
+        params["encoder"] = {"slots": enc_slots,
+                             "final_norm": norm_init(cfg.d_model, cfg.norm)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stack runner (shared by all modes)
+# ---------------------------------------------------------------------------
+def _run_stack(cfg: ArchConfig, params: Pytree, x, ctx: dict, caches,
+               mode: str, kinds, groups: int, slot_params, shared_p,
+               remat: bool = False):
+    """Scan the group pattern. caches: list per slot (stacked over groups)
+    or None. Returns (x, new_caches, aux_total)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        ps, cs = xs
+        new_cs = []
+        for si, kind in enumerate(kinds):
+            p = shared_p[kind] if kind in _SHARED_KINDS else ps[si]
+            c = None if cs is None else cs[si]
+            h, nc, a = _apply_kind(kind, p, cfg, h, ctx, c, mode)
+            new_cs.append(nc if nc is not None else {})
+            aux = aux + a
+        return (h, aux), new_cs
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs_params = [None if sp is None else sp for sp in slot_params]
+    xs = (xs_params, caches)
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.zeros((),
+                                                               jnp.float32)),
+                                        xs, length=groups)
+    return x, new_caches, aux
+
+
+def _embed(cfg: ArchConfig, params, tokens, dtype=jnp.bfloat16):
+    return hint(params["embed"].astype(dtype), "model", None)[tokens]
+
+
+def _logits(cfg: ArchConfig, params, x):
+    w = params["embed"].astype(x.dtype)
+    return (x @ w.T).astype(jnp.float32)
+
+
+def _encode_audio(cfg, params, frames, ctx):
+    """Whisper-like encoder over precomputed frame embeddings (stub
+    frontend per assignment)."""
+    enc = params["encoder"]
+    h = frames
+    ectx = dict(ctx)
+    ectx["positions"] = jnp.arange(frames.shape[1])[None, :]
+    h, _, _ = _run_stack(cfg, params, h, ectx, None, "train",
+                         ("enc_attn", "mlp"), cfg.n_enc_layers,
+                         enc["slots"], None, remat=ctx.get("remat", False))
+    return apply_norm(enc["final_norm"], h, cfg.norm)
+
+
+def _memory(cfg, params, ctx, img=None, frames=None):
+    if cfg.family == "vlm":
+        assert img is not None
+        return img.astype(jnp.bfloat16) @ params["img_proj"].astype(
+            jnp.bfloat16)
+    if cfg.family == "audio":
+        assert frames is not None
+        return _encode_audio(cfg, params, frames.astype(jnp.bfloat16), ctx)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def forward_train(cfg: ArchConfig, params: Pytree, tokens, labels,
+                  img=None, frames=None, backend: str = "auto",
+                  remat: bool = True):
+    """Returns (loss, metrics). tokens/labels (B, L) int32."""
+    groups, kinds, tail = cfg.pattern()
+    b, l = tokens.shape
+    x = _embed(cfg, params, tokens)
+    ctx = {"positions": jnp.arange(l)[None, :], "backend": backend,
+           "remat": remat}
+    ctx["memory"] = _memory(cfg, params, ctx, img=img, frames=frames)
+    x, _, aux = _run_stack(cfg, params, x, ctx, None, "train", kinds,
+                           groups, params["slots"],
+                           {k: params[k] for k in _SHARED_KINDS if k in params},
+                           remat=remat)
+    for i, kind in enumerate(tail):
+        x, _, a = _apply_kind(kind, params["tail"][i], cfg, x, ctx, None,
+                              "train")
+        aux = aux + a
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    loss = _ce_loss(params, x, labels)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / max(groups, 1)
+    return loss, {"loss": loss, "aux": aux}
+
+
+def _ce_loss(params, x, labels, chunk: int = 512):
+    """Sequence-chunked, vocab-sharding-friendly cross entropy.
+
+    Two memory hazards avoided:
+      * take_along_axis on the vocab-sharded logits would force an fp32
+        all-gather -> use masked sharded reductions instead;
+      * full (B, L, V/shard) fp32 logits (+ their grad) dominate HBM ->
+        compute per seq-chunk under jax.checkpoint so the backward pass
+        recomputes each chunk's logits.
+    """
+    w = params["embed"]
+    b, l, d = x.shape
+    if l % chunk:
+        chunk = l
+    nc = l // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def chunk_loss(args):
+        xc, lc = args
+        wt = hint(w.astype(xc.dtype), "model", None)
+        logits = (xc @ wt.T).astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        ids = jnp.arange(logits.shape[-1], dtype=lc.dtype)
+        picked = jnp.sum(jnp.where(ids[None, None, :] == lc[..., None],
+                                   logits, 0.0), axis=-1)
+        return jnp.sum(lse - picked)
+
+    tot = jnp.sum(jax.lax.map(jax.checkpoint(chunk_loss), (xs, ls)))
+    return tot / (b * l)
+
+
+def make_caches(cfg: ArchConfig, batch: int, lmax: int):
+    """Fixed-capacity cache pytree for prefill/decode."""
+    groups, kinds, tail = cfg.pattern()
+
+    def stack(spec):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a, (groups,) + a.shape).copy(), spec)
+
+    slots = [stack(_cache_spec_kind(k, cfg, batch, lmax)) for k in kinds]
+    tails = [_cache_spec_kind(k, cfg, batch, lmax) for k in tail]
+    out = {"slots": slots, "tail": tails,
+           "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "vlm":
+        out["memory"] = jnp.zeros((batch, cfg.n_img_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    elif cfg.family == "audio":
+        out["memory"] = jnp.zeros((batch, cfg.n_audio_ctx, cfg.d_model),
+                                  jnp.bfloat16)
+    return out
+
+
+def prefill(cfg: ArchConfig, params: Pytree, tokens, lmax: int,
+            img=None, frames=None, backend: str = "auto"):
+    """Full-sequence prefill: returns (last-token logits, caches)."""
+    groups, kinds, tail = cfg.pattern()
+    b, l = tokens.shape
+    caches = make_caches(cfg, b, lmax)
+    x = _embed(cfg, params, tokens)
+    ctx = {"positions": jnp.arange(l)[None, :], "backend": backend}
+    ctx["memory"] = _memory(cfg, params, ctx, img=img, frames=frames)
+    x, new_slots, _ = _run_stack(cfg, params, x, ctx, caches["slots"],
+                                 "prefill", kinds, groups, params["slots"],
+                                 {k: params[k] for k in _SHARED_KINDS if k in params})
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, nc, _ = _apply_kind(kind, params["tail"][i], cfg, x, ctx,
+                               caches["tail"][i], "prefill")
+        new_tail.append(nc)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _logits(cfg, params, x[:, -1:])
+    out_caches = {"slots": new_slots, "tail": new_tail,
+                  "len": jnp.asarray(l, jnp.int32)}
+    if ctx["memory"] is not None:
+        out_caches["memory"] = ctx["memory"]
+    return logits[:, 0], out_caches
+
+
+def decode_step(cfg: ArchConfig, params: Pytree, token, caches,
+                backend: str = "auto"):
+    """One-token decode. token (B,) int32. Returns (logits, caches)."""
+    groups, kinds, tail = cfg.pattern()
+    pos = caches["len"]
+    x = _embed(cfg, params, token[:, None])
+    ctx = {"positions": jnp.full((1, 1), pos, jnp.int32), "pos": pos,
+           "backend": backend, "memory": caches.get("memory")}
+    x, new_slots, _ = _run_stack(cfg, params, x, ctx, caches["slots"],
+                                 "decode", kinds, groups, params["slots"],
+                                 {k: params[k] for k in _SHARED_KINDS if k in params})
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, nc, _ = _apply_kind(kind, params["tail"][i], cfg, x, ctx,
+                               caches["tail"][i], "decode")
+        new_tail.append(nc)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _logits(cfg, params, x)
+    out = {"slots": new_slots, "tail": new_tail, "len": pos + 1}
+    if "memory" in caches:
+        out["memory"] = caches["memory"]
+    return logits[:, 0], out
+
+
+def param_count(params: Pytree) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer (GShard/Switch-style capacity dispatch).
+
+Routing uses top-k softmax gates; dispatch/combine are one-hot einsums so
+GSPMD lowers them to all-to-alls when the expert dimension is sharded over
+the `model` mesh axis (EP). Supports qwen3-moe (128 experts, top-8) and
+llama4-scout (16 experts, top-1 + shared expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Pytree, apply_norm, dense_init, hint, mlp_apply,
+                     mlp_init, norm_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int                 # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    shared_expert: bool = False
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+    norm: str = "rms"
+
+
+def moe_init(key, cfg: MoECfg) -> Pytree:
+    ks = jax.random.split(key, 6)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "norm": norm_init(d, cfg.norm),
+        "router": dense_init(ks[0], d, e),
+        # stacked expert weights: (E, d, f) / (E, f, d)
+        "w_up": jax.random.normal(ks[1], (e, d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (e, f, d), jnp.float32)
+        * f ** -0.5,
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, f),
+                                        jnp.float32) * d ** -0.5
+    if cfg.shared_expert:
+        p["shared"] = mlp_init(ks[4], d, cfg.d_ff_shared or cfg.d_ff,
+                               cfg.act, cfg.norm)
+    return p
+
+
+def moe_apply(params: Pytree, cfg: MoECfg, x,
+              capacity: Optional[int] = None):
+    """x (B, L, D) -> (B, L, D). Returns (out, aux_loss)."""
+    b, l, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    xn = apply_norm(params["norm"], x, cfg.norm)
+    logits = (xn @ params["router"].astype(dt)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)               # (B, L, E)
+    gate_vals, gate_idx = jax.lax.top_k(gates, k)         # (B, L, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if capacity is None:
+        capacity = max(1, int(cfg.capacity_factor * l * k / e))
+
+    # position of each (token, k) assignment within its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (B, L, K, E)
+    flat = onehot.reshape(b, l * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat        # (B, L*K, E)
+    pos = (pos_in_expert * flat).sum(-1).reshape(b, l, k)
+    keep = pos < capacity
+
+    # memory-lean formulation: contract the K assignment axis immediately so
+    # the materialized dispatch/combine tensors are (B, L, E, C), never
+    # (B, L, K, E, C)
+    oh_e = jax.nn.one_hot(gate_idx, e, dtype=dt)           # (B, L, K, E)
+    oh_c = jax.nn.one_hot(pos, capacity, dtype=dt)         # (B, L, K, C)
+    keep_f = keep.astype(dt)
+    combine = jnp.einsum("blke,blkc,blk,blk->blec", oh_e, oh_c, keep_f,
+                         gate_vals.astype(dt))
+    dispatch = (combine > 0).astype(dt)                    # (B, L, E, C)
+
+    x_e = jnp.einsum("blec,bld->becd", dispatch, xn)       # all-to-all in EP
+    w_up = hint(params["w_up"].astype(dt), "model", None, None)
+    up = jnp.einsum("becd,edf->becf", x_e, w_up)
+    if cfg.act == "swiglu":
+        w_gate = hint(params["w_gate"].astype(dt), "model", None, None)
+        gate = jnp.einsum("becd,edf->becf", x_e, w_gate)
+        h = jax.nn.silu(gate) * up
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    w_down = hint(params["w_down"].astype(dt), "model", None, None)
+    y_e = jnp.einsum("becf,efd->becd", h, w_down)
+    out = jnp.einsum("blec,becd->bld", combine, y_e)       # all-to-all back
+
+    if cfg.shared_expert:
+        out = out + mlp_apply(params["shared"], x, cfg.act, cfg.norm)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    density = jnp.mean(oh_e.astype(jnp.float32).sum(2), axis=(0, 1))
+    p_mean = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(density * p_mean)
+    return out, aux

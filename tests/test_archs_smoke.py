@@ -1,0 +1,63 @@
+"""Per-arch smoke tests (assignment deliverable (f)): REDUCED config of the
+same family, one forward/train step on CPU, output shapes + no NaNs, and
+prefill->decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b=2, s=16):
+    kw = {}
+    if cfg.family == "vlm":
+        kw["img"] = jax.random.normal(
+            KEY, (b, cfg.n_img_tokens, cfg.d_img), jnp.bfloat16)
+    if cfg.family == "audio":
+        kw["frames"] = jax.random.normal(
+            KEY, (b, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16)
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab, jnp.int32)
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_no_nans(arch):
+    cfg = get_config(arch, reduced=True)
+    params = L.init_params(cfg, KEY)
+    toks, kw = _inputs(cfg)
+    loss, metrics = jax.jit(
+        lambda p, t: L.forward_train(cfg, p, t, t, **kw))(params, toks)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: L.forward_train(cfg, p, toks, toks,
+                                           **kw)[0])(params)
+    gn = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(t) after prefill(:t) must match prefill(:t+1) logits."""
+    cfg = get_config(arch, reduced=True)
+    params = L.init_params(cfg, KEY)
+    toks, kw = _inputs(cfg, b=2, s=9)
+    lmax = 12
+    lg_full, _ = jax.jit(
+        lambda p, t: L.prefill(cfg, p, t, lmax=lmax, **kw))(params, toks)
+    lg_pre, caches = jax.jit(
+        lambda p, t: L.prefill(cfg, p, t, lmax=lmax, **kw))(
+            params, toks[:, :-1])
+    lg_dec, _ = jax.jit(
+        lambda p, t, c: L.decode_step(cfg, p, t, c))(
+            params, toks[:, -1], caches)
+    err = float(jnp.abs(lg_dec - lg_full).max())
+    assert err < 0.15, f"{arch}: decode/prefill logits diverge by {err}"
+
+
+def test_vocab_padding_unused():
+    cfg = get_config("mamba2-1.3b", reduced=True)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab

@@ -1,0 +1,35 @@
+import numpy as np
+import pytest
+
+from repro.core import (ThermalRCModel, build_network, make_2p5d_package,
+                        tune_capacitance)
+from repro.core.calibrate import multipliers_by_layer_name, \
+    reference_transient
+from repro.core.workloads import wl1
+
+
+@pytest.mark.slow
+def test_capacitance_tuning_improves_transient():
+    pkg = make_2p5d_package(4)
+    dt = 0.01
+    q = wl1(4, dt=dt, t_stress=1.0, t_prbs=1.0, t_cool=0.5, seed=2)
+    ref, _ = reference_transient(pkg, q, dt, dx=0.5e-3)
+
+    def mae(mults):
+        m = ThermalRCModel(build_network(pkg, cap_multipliers=mults))
+        obs = np.asarray(m.make_simulator(dt)(m.zero_state(), q))
+        return np.abs(obs - ref).mean()
+
+    base = mae(None)
+    mults = tune_capacitance(pkg, dt=dt, q_traj=q, ref_obs=ref, maxiter=25)
+    tuned = mae(mults)
+    assert tuned <= base + 1e-6, (base, tuned)
+
+
+def test_multiplier_name_transfer():
+    pkg = make_2p5d_package(16)
+    by_name = {"chiplets": 1.2, "lid": 0.9}
+    mults = multipliers_by_layer_name(pkg, by_name)
+    names = [l.name for l in pkg.layers]
+    assert mults[names.index("chiplets")] == 1.2
+    assert mults[names.index("lid")] == 0.9

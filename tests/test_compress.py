@@ -1,0 +1,28 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.compress import (compress_grads_int8,
+                                     decompress_grads_int8)
+
+
+def test_unbiased_and_bounded():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    errs = []
+    for i in range(20):
+        q = compress_grads_int8(g, jax.random.PRNGKey(i))
+        d = decompress_grads_int8(q)
+        errs.append(np.asarray(d["w"] - g["w"]))
+        scale = float(q["w"]["scale"])
+        assert np.abs(errs[-1]).max() <= scale + 1e-6  # one quant step
+    mean_err = np.mean(errs, axis=0)
+    # stochastic rounding -> unbiased: the averaged error shrinks
+    assert np.abs(mean_err).mean() < np.abs(errs[0]).mean() / 2
+
+
+def test_wire_bytes_are_4x_smaller():
+    g = {"w": jnp.zeros((1024,), jnp.float32)}
+    q = compress_grads_int8(g, jax.random.PRNGKey(0))
+    assert q["w"]["q"].dtype == jnp.int8
+    assert q["w"]["q"].nbytes == g["w"].nbytes // 4

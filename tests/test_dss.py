@@ -1,0 +1,57 @@
+"""DSS vs RC exactness under ZOH; stability; regeneration speed."""
+import time
+
+import numpy as np
+
+from repro.core import (ThermalRCModel, build_network, discretize_rc,
+                        make_2p5d_package, spectral_radius)
+from repro.core.workloads import wl1
+
+
+def test_dss_matches_rc():
+    """DSS (exact ZOH) vs RC (backward Euler): agreement is bounded by
+    BE's O(dt) first-order damping on power steps; MAE is what the paper's
+    Table 8 reports (identical rows for RC and DSS) and must be tiny, and
+    the gap must shrink with dt (consistency)."""
+    pkg = make_2p5d_package(4)
+    rc = ThermalRCModel(build_network(pkg))
+    maes = []
+    for dt in (0.01, 0.002):
+        q = wl1(4, dt=dt, t_stress=1.0, t_prbs=1.0, t_cool=0.5, seed=1)
+        obs_rc = np.asarray(rc.make_simulator(dt)(rc.zero_state(), q))
+        dss = discretize_rc(rc, ts=dt)
+        obs_dss = np.asarray(dss.simulate(np.zeros(rc.net.n, np.float32),
+                                          q))
+        maes.append(np.abs(obs_rc - obs_dss).mean())
+    assert maes[0] < 0.15, maes
+    assert maes[1] < maes[0] / 2  # first-order convergence in dt
+
+
+def test_dss_stable():
+    pkg = make_2p5d_package(4)
+    rc = ThermalRCModel(build_network(pkg))
+    dss = discretize_rc(rc, ts=0.01)
+    assert spectral_radius(dss) < 1.0  # dissipative package
+
+
+def test_dss_batched_matches_single():
+    pkg = make_2p5d_package(4)
+    rc = ThermalRCModel(build_network(pkg))
+    dss = discretize_rc(rc, ts=0.01)
+    q = wl1(4, dt=0.01, t_stress=0.5, t_prbs=0.5, t_cool=0.2)
+    single = np.asarray(dss.simulate(np.zeros(rc.net.n, np.float32), q))
+    batch = np.asarray(dss.simulate_batch(
+        np.zeros((3, rc.net.n), np.float32),
+        np.tile(q[:, None, :], (1, 3, 1))))
+    for b in range(3):
+        np.testing.assert_allclose(batch[:, b], single, atol=2e-2)
+
+
+def test_dss_regeneration_is_fast():
+    pkg = make_2p5d_package(16)
+    rc = ThermalRCModel(build_network(pkg))
+    discretize_rc(rc, ts=0.01)  # warm
+    t0 = time.time()
+    discretize_rc(rc, ts=0.005)
+    regen = time.time() - t0
+    assert regen < 2.0, f"DSS regen {regen:.2f}s (paper: milliseconds)"

@@ -1,0 +1,49 @@
+import numpy as np
+
+from repro.core import (ThermalManager, ThermalRCModel, build_network,
+                        discretize_rc, make_2p5d_package)
+
+
+def _mgr(t_max=85.0, t_target=80.0):
+    pkg = make_2p5d_package(16)
+    rc = ThermalRCModel(build_network(pkg))
+    return ThermalManager(discretize_rc(rc, ts=0.01), t_max=t_max,
+                          t_target=t_target), rc
+
+
+def test_throttle_holds_threshold():
+    mgr, rc = _mgr()
+    powers = np.full((800, 16), 3.0, np.float32)  # would reach ~110 C
+    st, tmax, thr = mgr.run(powers)
+    assert float(tmax[-1]) < 85.0
+    assert float(thr[-1]) < 1.0  # it actually throttled
+
+
+def test_no_throttle_when_cool():
+    mgr, rc = _mgr(t_max=200.0, t_target=150.0)
+    powers = np.full((300, 16), 1.0, np.float32)
+    st, tmax, thr = mgr.run(powers)
+    assert float(thr[-1]) == 1.0
+    assert int(st.violations) == 0
+
+
+def test_violations_counted():
+    mgr, _ = _mgr(t_max=30.0, t_target=29.0)  # absurdly low threshold
+    powers = np.full((300, 16), 3.0, np.float32)
+    st, tmax, thr = mgr.run(powers)
+    assert int(st.violations) > 0
+
+
+def test_checkpoint_trigger():
+    # a floor the throttle cannot rescue (min_throttle 0.5 at a 27C limit)
+    # -> sustained violations -> pre-emptive checkpoint requested
+    pkg = make_2p5d_package(16)
+    rc = ThermalRCModel(build_network(pkg))
+    dss = discretize_rc(rc, ts=0.01)
+    mgr = ThermalManager(dss, t_max=27.0, t_target=26.5, min_throttle=0.5)
+    powers = np.full((400, 16), 3.0, np.float32)
+    st, _, _ = mgr.run(powers)
+    assert mgr.should_checkpoint(st, sustained=50)
+    mgr2, _ = _mgr(t_max=200.0, t_target=150.0)
+    st2, _, _ = mgr2.run(powers[:100])
+    assert not mgr2.should_checkpoint(st2)

@@ -1,0 +1,50 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import (OptConfig, adamw_update, global_norm,
+                                  init_opt_state, lr_at)
+
+
+def test_adamw_converges_quadratic():
+    params = {"wq": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = OptConfig(peak_lr=0.3, warmup_steps=5, total_steps=300,
+                    weight_decay=0.0)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(300):
+        g = {"wq": 2 * (params["wq"] - target)}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["wq"]),
+                               np.asarray(target), atol=0.05)
+
+
+def test_lr_schedule():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < 0.2
+    assert abs(max(lrs) - 1.0) < 1e-6
+    assert lrs[-1] < 0.2  # decayed
+    assert np.argmax(lrs) <= 11
+
+
+def test_clipping():
+    params = {"wq": jnp.zeros(3)}
+    state = init_opt_state(params)
+    cfg = OptConfig(peak_lr=1e-3, clip_norm=1.0, warmup_steps=0,
+                    weight_decay=0.0)
+    huge = {"wq": jnp.full(3, 1e6)}
+    _, _, m = adamw_update(params, huge, state, cfg)
+    assert float(m["grad_norm"]) > 1e5  # reported unclipped
+
+
+def test_no_decay_on_norms():
+    from repro.training.optim import _decayable
+
+    class K:
+        def __init__(self, key):
+            self.key = key
+
+    assert not _decayable([K("w")])
+    assert not _decayable([K("a_log")])
+    assert _decayable([K("wq")])

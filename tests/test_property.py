@@ -1,0 +1,74 @@
+"""Hypothesis property tests on system invariants (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ThermalRCModel, build_network, discretize_rc,
+                        make_2p5d_package, spectral_radius)
+from repro.kernels.flash_attn.ref import gqa_ref
+from repro.models.layers import apply_rope
+
+
+@st.composite
+def package_cfg(draw):
+    n_side = draw(st.sampled_from([1, 2]))
+    htc = draw(st.floats(500.0, 8000.0))
+    return n_side * n_side, htc
+
+
+@given(package_cfg())
+def test_rc_network_invariants(cfg):
+    n_chip, htc = cfg
+    pkg = make_2p5d_package(n_chip, htc_top=htc)
+    net = build_network(pkg)
+    g = net.g_dense()
+    # symmetry of conductances
+    np.testing.assert_allclose(g, g.T, rtol=1e-9)
+    # diagonal dominance with convection grounding: row sums <= 0
+    assert np.all(g.sum(axis=1) <= 1e-9)
+    # positive capacitances
+    assert np.all(net.C > 0)
+    # power matrix: columns sum to 1 (all power lands somewhere)
+    np.testing.assert_allclose(net.P.sum(axis=0), 1.0, rtol=1e-9)
+
+
+@given(st.floats(0.2, 3.0), st.floats(0.001, 0.1))
+def test_steady_state_physicality(p_chip, ts):
+    pkg = make_2p5d_package(4)
+    rc = ThermalRCModel(build_network(pkg))
+    theta = np.asarray(rc.steady_state(np.full(4, p_chip)))
+    # above ambient everywhere; hotter with more power (monotonicity)
+    assert np.all(theta > -1e-4)
+    theta2 = np.asarray(rc.steady_state(np.full(4, p_chip * 1.5)))
+    assert np.all(theta2 >= theta - 1e-4)
+    # DSS stability at any sampling period
+    assert spectral_radius(discretize_rc(rc, ts=ts)) < 1.0
+
+
+@given(st.integers(0, 6), st.integers(2, 5))
+@settings(max_examples=8)
+def test_attention_causality(perturb_pos, lq):
+    """Output at position i must not depend on tokens after i."""
+    rng = np.random.default_rng(0)
+    l = 8
+    q = jnp.asarray(rng.normal(size=(1, 2, l, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, l, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, l, 16)), jnp.float32)
+    out1 = gqa_ref(q, k, v, causal=True)
+    k2 = k.at[:, :, perturb_pos + 1:].add(7.0)
+    v2 = v.at[:, :, perturb_pos + 1:].add(-3.0)
+    out2 = gqa_ref(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :, :perturb_pos + 1],
+                               out2[:, :, :perturb_pos + 1], atol=1e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10)
+def test_rope_preserves_norm(pos):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 1, 2, 32)), jnp.float32)
+    r = apply_rope(x, jnp.array([[pos]]), theta=10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x)),
+                               np.linalg.norm(np.asarray(r)), rtol=1e-5)

@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests: training reduces loss; serving generates;
+DTPM thermal management runs inside the loop; resume-from-checkpoint
+continues bit-compatibly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, batch_at
+from repro.models import lm as L
+from repro.training.optim import OptConfig, init_opt_state
+from repro.training.steps import TrainConfig, make_train_step
+
+
+def _setup(arch="stablelm-1.6b", microbatch=1):
+    cfg = get_config(arch, reduced=True)
+    tcfg = TrainConfig(opt=OptConfig(peak_lr=1e-2, warmup_steps=10,
+                                     total_steps=150),
+                       backend="xla", microbatch=microbatch)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    params = L.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    return cfg, step, params, opt, data
+
+
+def test_training_reduces_loss():
+    cfg, step, params, opt, data = _setup()
+    losses = []
+    for s in range(150):
+        params, opt, m = step(params, opt, batch_at(data, s))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    assert np.isfinite(losses[-1])
+
+
+def test_microbatched_matches_unbatched_grads():
+    cfg, step1, params, opt, data = _setup(microbatch=1)
+    _, step2, _, _, _ = _setup(microbatch=2)
+    b = batch_at(data, 0)
+    p1, o1, m1 = step1(params, opt, b)
+    p2, o2, m2 = step2(params, opt, b)
+    # same data, same update (accumulation is exact in fp32)
+    d = max(float(jnp.abs(a - b_).max())
+            for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-3, d
+
+
+def test_generation_runs():
+    from repro.launch.serve import generate
+    cfg = get_config("mamba2-1.3b", reduced=True)
+    params = L.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab, jnp.int32)
+    toks = generate(cfg, params, prompts, n_new=6, lmax=16)
+    assert toks.shape == (2, 6)
+    assert np.all((np.asarray(toks) >= 0)
+                  & (np.asarray(toks) < cfg.padded_vocab))
+
+
+def test_thermal_aware_training_loop(tmp_path):
+    """The paper's DSS model running inside a real training loop."""
+    from repro.launch.train import main
+    loss = main(["--arch", "stablelm-1.6b", "--steps", "30",
+                 "--batch", "4", "--seq", "32", "--thermal",
+                 "--ckpt-dir", str(tmp_path), "--ckpt-every", "10"])
+    assert np.isfinite(loss)
+
+
+def test_resume_from_checkpoint(tmp_path):
+    from repro.launch.train import main
+    main(["--arch", "mamba2-1.3b", "--steps", "12", "--batch", "4",
+          "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"])
+    # second invocation resumes from LATEST and continues
+    loss = main(["--arch", "mamba2-1.3b", "--steps", "14", "--batch", "4",
+                 "--seq", "32", "--ckpt-dir", str(tmp_path),
+                 "--ckpt-every", "0"])
+    assert np.isfinite(loss)

@@ -1,0 +1,35 @@
+import numpy as np
+import pytest
+
+from repro.core.workloads import (ALL_WORKLOADS, P2P5D, P3D, get_workload,
+                                  wl1)
+
+
+def test_wl1_phases():
+    q = wl1(16, dt=0.01, t_stress=1.0, t_prbs=1.0, t_cool=0.5)
+    assert q.shape == (250, 16)
+    assert np.all(q[:100] == P2P5D.p_max)          # stress
+    assert np.all(q[-50:] == 0.0)                  # cooldown
+    mid = q[100:200]
+    assert mid.min() >= 0.25 * P2P5D.p_max - 1e-9  # PRBS low level
+    assert mid.max() <= P2P5D.p_max + 1e-9
+
+
+@pytest.mark.parametrize("name", ALL_WORKLOADS[1:])
+def test_nn_workloads(name):
+    q = get_workload(name, 16, dt=0.01, time_scale=0.2)
+    assert q.ndim == 2 and q.shape[1] == 16
+    assert q.min() >= P2P5D.p_idle - 1e-9
+    assert q.max() <= P2P5D.p_max + 1e-9
+    assert q.max() > P2P5D.p_idle  # something actually ran
+
+
+def test_determinism():
+    a = get_workload("WL2", 16, time_scale=0.2, seed=5)
+    b = get_workload("WL2", 16, time_scale=0.2, seed=5)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_3d_power_spec():
+    q = get_workload("WL1", 48, spec=P3D, time_scale=0.1)
+    assert q.max() <= P3D.p_max + 1e-9

@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core import (Block, FVMReference, Layer, Package, voxelize)
+from repro.core import Block, Layer, Package, build
 from repro.core.materials import (COPPER, INTERPOSER, SILICON, UNDERFILL,
                                   Material, iso)
 
@@ -57,8 +57,7 @@ def run_table2(power: float = 0.08, dx: float = 12.5e-6):
     out = {}
     t0 = time.time()
     pkg_d = ubump_subblock(detailed=True)
-    fvm_d = FVMReference(voxelize(pkg_d, dx_target=dx, dz_target=10e-6),
-                         cg_tol=1e-8)
+    fvm_d = build(pkg_d, "fvm", dx_target=dx, dz_target=10e-6, cg_tol=1e-8)
     ss = fvm_d.steady_state(np.array([power]))
     upper_d = fvm_d.slab_mean_temp(ss, 2)
     lower_d = fvm_d.slab_mean_temp(ss, 0)
@@ -73,8 +72,7 @@ def run_table2(power: float = 0.08, dx: float = 12.5e-6):
 
     t0 = time.time()
     pkg_a = ubump_subblock(detailed=False, k_eff=k_eff)
-    fvm_a = FVMReference(voxelize(pkg_a, dx_target=dx, dz_target=10e-6),
-                         cg_tol=1e-8)
+    fvm_a = build(pkg_a, "fvm", dx_target=dx, dz_target=10e-6, cg_tol=1e-8)
     ss_a = fvm_a.steady_state(np.array([power]))
     upper_a = fvm_a.slab_mean_temp(ss_a, 2)
     lower_a = fvm_a.slab_mean_temp(ss_a, 0)
@@ -138,14 +136,12 @@ def run_tables34(dx: float = 0.1e-3):
     for kind in ("detailed", "abstract", "none"):
         pkg = two_chiplet_pkg(kind)
         t0 = time.time()
-        fvm = FVMReference(voxelize(pkg, dx_target=dx, dz_target=30e-6),
-                           cg_tol=1e-7)
-        idx = fvm.vm.obs_tags.index("rx")
+        fvm = build(pkg, "fvm", dx_target=dx, dz_target=30e-6, cg_tol=1e-7)
+        idx = fvm.tags.index("rx")
         ss = fvm.steady_state(q_steady)
-        rx_steady = float(np.einsum("zyx,zyx->", np.asarray(
-            fvm.vm.obs[idx]), np.asarray(ss))) + 25.0
+        rx_steady = float(np.asarray(fvm.observe(ss))[idx])
         sim = fvm.make_simulator(0.05)
-        obs, _ = sim(fvm.zero_state(), q_trans)
+        obs = sim(fvm.zero_state(), q_trans)
         rx_trans = np.asarray(obs)[:, idx]
         res[kind] = {"rx_steady_C": rx_steady, "rx_trans": rx_trans,
                      "time_s": time.time() - t0}

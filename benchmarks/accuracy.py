@@ -14,9 +14,7 @@ import os
 
 import numpy as np
 
-from repro.core import (BASELINES, FVMReference, ThermalRCModel,
-                        build_network, discretize_rc, make_2p5d_package,
-                        make_3d_package, voxelize)
+from repro.core import build, make_2p5d_package, make_3d_package
 from repro.core.workloads import P2P5D, P3D, get_workload
 
 T_VIOLATION = 85.0  # paper §5.4
@@ -46,26 +44,17 @@ def run_cell(system: str, workload: str, time_scale: float, dx: float,
     q = get_workload(workload, n_src, dt=DT, spec=spec,
                      time_scale=time_scale)
 
-    fvm = FVMReference(voxelize(pkg, dx_target=dx), cg_tol=1e-6)
-    sim = fvm.make_simulator(DT)
-    ref, _ = sim(fvm.zero_state(), q)
-    ref = np.asarray(ref)
+    fvm = build(pkg, "fvm", dx_target=dx, cg_tol=1e-6)
+    ref = np.asarray(fvm.make_simulator(DT)(fvm.zero_state(), q))
 
     out = {"system": system, "workload": workload, "models": {}}
-    rc = ThermalRCModel(build_network(pkg))
-    obs_rc = np.asarray(rc.make_simulator(DT)(rc.zero_state(), q))
-    out["models"]["thermal_rc"] = _metrics(ref, obs_rc)
-
-    dss = discretize_rc(rc, ts=DT)
-    obs_dss = np.asarray(dss.simulate(
-        np.zeros(rc.net.n, np.float32), q))
-    out["models"]["dss"] = _metrics(ref, obs_dss)
-
-    for name, fn in BASELINES.items():
-        mdl, method = fn(pkg)
-        obs_b = np.asarray(mdl.make_simulator(DT, method)(
-            mdl.zero_state(), q))
-        out["models"][name] = _metrics(ref, obs_b)
+    names = {"rc": "thermal_rc", "dss": "dss", "hotspot": "hotspot",
+             "3dice": "3dice", "pact": "pact"}
+    for fidelity, label in names.items():
+        mdl = build(pkg, fidelity, **({"ts": DT} if fidelity == "dss"
+                                      else {}))
+        obs = np.asarray(mdl.make_simulator(DT)(mdl.zero_state(), q))
+        out["models"][label] = _metrics(ref, obs)
     if verbose:
         row = "  ".join(f"{k}={v['mae']:.2f}C/{v['viol_acc']:.0f}%"
                         for k, v in out["models"].items())

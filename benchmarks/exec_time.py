@@ -1,13 +1,20 @@
 """Paper Fig. 8 + §5.3: execution-time comparison of the model family.
 
-Measures wall time to simulate a WL1 trace with:
-  thermal RC (ours, prefactored BE)  vs  DSS (ours)  vs
-  HotSpot-like (RK4)  vs  3D-ICE-like (per-step LU)  vs PACT-like (TRAP),
-plus DSS regeneration latency (paper: "a few milliseconds") and the
-batched-DSE throughput unique to the TPU formulation.
+Measures, per system size and per registered fidelity:
+  * model-BUILD time (geometry -> ready simulator), including the
+    vectorized network assembly vs the seed's O(n^2) pair-loop builder
+    (``core/assembly_ref.py``) — the speedup tracked across PRs;
+  * simulation wall time and per-step time for a WL1 trace with
+    thermal RC (prefactored BE) vs DSS vs HotSpot-like (RK4) vs
+    3D-ICE-like (per-step LU) vs PACT-like (TRAP);
+  * DSS regeneration latency (paper: "a few milliseconds") and the
+    batched-DSE throughput unique to the TPU formulation.
 
-Absolute times are this container's CPU; the reproduced claim is the
-ORDERING and the orders-of-magnitude separation (DESIGN.md §9).
+All models are obtained through the fidelity registry. Results land in a
+machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
+trajectory is tracked across PRs. Absolute times are this container's CPU;
+the reproduced claim is the ORDERING and the orders-of-magnitude
+separation (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -19,9 +26,13 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (BASELINES, ThermalRCModel, build_network,
-                        discretize_rc, make_2p5d_package, make_3d_package)
+from repro.core import build, discretize, discretize_rc, make_2p5d_package, \
+    make_3d_package
+from repro.core.assembly_ref import build_network_ref
+from repro.core.rc_model import build_network
 from repro.core.workloads import P2P5D, P3D, wl1
+
+SIM_FIDELITIES = ("rc", "dss", "hotspot", "3dice", "pact")
 
 
 def _time(fn, warmup: int = 1, reps: int = 3) -> float:
@@ -35,43 +46,88 @@ def _time(fn, warmup: int = 1, reps: int = 3) -> float:
     return min(ts)
 
 
-def run_system(system: str, n_steps: int, verbose=True) -> dict:
+def _host_time(fn, reps: int = 3) -> float:
+    """min wall time of a host-side (non-jax) callable."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _package(system: str):
     if system.startswith("3d"):
-        pkg, n_src, spec = make_3d_package(16, 3), 48, P3D
-    else:
-        n = int(system.split("_")[1])
-        pkg, n_src, spec = make_2p5d_package(n), n, P2P5D
+        return make_3d_package(16, 3), 48, P3D
+    n = int(system.split("_")[1])
+    return make_2p5d_package(n), n, P2P5D
+
+
+def bench_assembly(system: str, legacy_reps: int = 1) -> dict:
+    """Network-assembly time: vectorized (ours) vs seed pair loops."""
+    pkg, _, _ = _package(system)
+    grid = discretize(pkg)
+    t_grid = _host_time(lambda: discretize(pkg))
+    t_vec = _host_time(lambda: build_network(pkg, grid=grid))
+    t_leg = _host_time(lambda: build_network_ref(pkg, grid=grid),
+                       reps=legacy_reps)
+    out = {"system": system, "nodes": grid.n,
+           "discretize_s": t_grid,
+           "assembly_vectorized_s": t_vec,
+           "assembly_legacy_s": t_leg,
+           "assembly_speedup": t_leg / max(t_vec, 1e-12)}
+    print(f"[assembly ] {system:8s} n={grid.n:5d} "
+          f"vectorized={t_vec*1e3:7.2f}ms legacy={t_leg:7.3f}s "
+          f"speedup={out['assembly_speedup']:.0f}x", flush=True)
+    return out
+
+
+def run_system(system: str, n_steps: int, verbose=True) -> dict:
+    pkg, n_src, spec = _package(system)
     dt = 0.01
     q = wl1(n_src, dt=dt, spec=spec)[:n_steps].astype(np.float32)
 
-    out = {"system": system, "n_steps": n_steps, "nodes": {}, "times": {}}
-    rc = ThermalRCModel(build_network(pkg))
-    out["nodes"]["thermal_rc"] = rc.net.n
-    sim = rc.make_simulator(dt)
-    theta0 = rc.zero_state()
-    out["times"]["thermal_rc"] = _time(lambda: sim(theta0, q))
+    out = {"system": system, "n_steps": n_steps, "nodes": {},
+           "build_s": {}, "times": {}, "per_step_s": {}}
 
-    dss = discretize_rc(rc, ts=dt)  # warm (jit of expm)
+    def record(name, model, sim, state0, warmup=1, reps=3):
+        out["nodes"][name] = model.net.n if hasattr(model, "net") \
+            else model.n
+        t = _time(lambda: sim(state0, q), warmup=warmup, reps=reps)
+        out["times"][name] = t
+        out["per_step_s"][name] = t / n_steps
+
+    build(pkg, "dss", ts=dt)  # warm the expm jit before any timing
+    # fidelity build times (geometry -> ready model, host side); the model
+    # constructed inside the timed call is kept and reused below
+    built = {}
+    for f in SIM_FIDELITIES:
+        opts = {"ts": dt} if f == "dss" else {}
+        def _build(f=f, opts=opts):
+            built[f] = build(pkg, f, **opts)
+        out["build_s"][f] = _host_time(_build, reps=1)
+
+    rc = built["rc"]
+    record("thermal_rc", rc, rc.make_simulator(dt), rc.zero_state())
+
     t0 = time.perf_counter()
-    dss = discretize_rc(rc, ts=dt * 0.5)
+    discretize_rc(rc, ts=dt * 0.5)
     out["times"]["dss_regeneration"] = time.perf_counter() - t0
-    z = np.zeros(rc.net.n, np.float32)
-    out["times"]["dss"] = _time(lambda: dss.simulate(z, q))
+    dss = built["dss"]
+    record("dss", dss, dss.make_simulator(dt), dss.zero_state())
 
     # batched DSE rollout (TPU-native capability; 64 candidates at once)
     B = 64
-    zb = np.zeros((B, rc.net.n), np.float32)
+    zb = dss.zero_state(batch=B)
     qb = np.tile(q[:, None, :], (1, B, 1))
-    t_batch = _time(lambda: dss.simulate_batch(zb, qb))
+    t_batch = _time(lambda: dss.simulate_batch(zb, qb, dt))
     out["times"]["dss_batched_64"] = t_batch
     out["times"]["dss_per_candidate"] = t_batch / B
 
-    for name, fn in BASELINES.items():
-        mdl, method = fn(pkg)
-        out["nodes"][name] = mdl.net.n
-        simb = mdl.make_simulator(dt, method)
-        zb0 = mdl.zero_state()
-        out["times"][name] = _time(lambda: simb(zb0, q), warmup=1, reps=1)
+    for name in ("hotspot", "3dice", "pact"):
+        mdl = built[name]
+        record(name, mdl, mdl.make_simulator(dt), mdl.zero_state(),
+               warmup=1, reps=1)
     if verbose:
         t = out["times"]
         print(f"[exec_time] {system:8s} rc={t['thermal_rc']:.3f}s "
@@ -84,18 +140,27 @@ def run_system(system: str, n_steps: int, verbose=True) -> dict:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--out", default="benchmarks/artifacts/exec_time.json")
+    ap.add_argument("--out", default="BENCH_exec_time.json")
     args = ap.parse_args(argv)
-    systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] if args.full \
+    sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] if args.full \
         else ["2p5d_16", "3d_16x3"]
     n_steps = 4000 if args.full else 600
-    results = [run_system(s, n_steps) for s in systems]
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    # assembly speedup is always tracked on the paper's largest systems
+    assembly = [bench_assembly(s) for s in
+                ["2p5d_16", "2p5d_64", "3d_16x3"]]
+    systems = [run_system(s, n_steps) for s in sim_systems]
+    results = {"bench": "exec_time", "full": bool(args.full),
+               "assembly": assembly, "systems": systems}
+    if os.path.dirname(args.out):
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
-    for r in results:
+    for r in systems:
         for m, t in r["times"].items():
             print(f"fig8,{r['system']},{m},{t*1e6:.1f}us_total")
+    for a in assembly:
+        print(f"assembly,{a['system']},speedup,"
+              f"{a['assembly_speedup']:.1f}x")
     return results
 
 

@@ -7,21 +7,18 @@ Run:  PYTHONPATH=src python examples/dtpm_runtime.py
 """
 import numpy as np
 
-from repro.core import (ThermalManager, ThermalRCModel, build_network,
-                        discretize_rc, make_2p5d_package)
+from repro.core import ThermalManager, make_2p5d_package
 
 pkg = make_2p5d_package(16)
-rc = ThermalRCModel(build_network(pkg))
-dss = discretize_rc(rc, ts=0.01)
+mgr = ThermalManager.from_package(pkg, ts=0.01, t_max=85.0, t_target=82.0)
+dss = mgr.dss
 
 powers = np.full((1500, 16), 3.0, np.float32)  # sustained max power
 
 # uncontrolled: what the package would do
-obs = np.asarray(dss.simulate(np.zeros(dss.n, np.float32), powers))
+obs = np.asarray(dss.simulate(dss.zero_state(), powers))
 print(f"uncontrolled: peak {obs.max():.1f} C "
       f"({(obs > 85).any(axis=1).mean()*100:.0f}% of steps in violation)")
-
-mgr = ThermalManager(dss, t_max=85.0, t_target=82.0)
 st, tmax, thr = mgr.run(powers)
 tmax = np.asarray(tmax)
 print(f"DTPM:         peak {tmax.max():.1f} C, final throttle "

@@ -14,12 +14,10 @@ import time
 
 import numpy as np
 
-from repro.core import (ThermalRCModel, build_network, discretize_rc,
-                        make_2p5d_package)
+from repro.core import build, make_2p5d_package
 
 pkg = make_2p5d_package(16)
-rc = ThermalRCModel(build_network(pkg))
-dss = discretize_rc(rc, ts=0.01)
+dss = build(pkg, "dss", ts=0.01)
 
 # workload: 4 "hot" jobs (3 W) + 12 idle chiplets (0.4 W), 3 s window
 HOT, IDLE, STEPS = 3.0, 0.4, 300
@@ -31,7 +29,7 @@ for b, combo in enumerate(candidates):
 
 t0 = time.time()
 temps = np.asarray(dss.simulate_batch(
-    np.zeros((B, dss.n), np.float32), q))       # (T, B, 16)
+    dss.zero_state(batch=B), q))                 # (T, B, 16)
 dt = time.time() - t0
 peak = temps.max(axis=(0, 2))                    # (B,) peak temp per design
 best = int(np.argmin(peak))

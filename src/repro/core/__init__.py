@@ -3,11 +3,16 @@
 Fidelity ladder (paper Fig. 2):
   FVMReference (golden, stands in for FEM)  ->  ThermalRCModel (seconds)
   ->  DSSModel (milliseconds)  ->  ThermalManager (runtime DTPM).
+
+All fidelities share the ``ThermalSimulator`` protocol and are built by
+string through the registry: ``build(pkg, fidelity="rc"|"fvm"|"dss"|...)``.
 """
 from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
 from .calibrate import multipliers_by_layer_name, tune_capacitance
 from .dss import DSSModel, discretize_rc, spectral_radius
 from .dtpm import DTPMState, ThermalManager
+from .fidelity import (ThermalSimulator, available_fidelities, build,
+                       register_fidelity)
 from .fvm_ref import FVMReference, VoxelModel, voxelize
 from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
                        discretize, make_2p5d_package, make_3d_package,
@@ -23,6 +28,8 @@ __all__ = [
     "multipliers_by_layer_name", "tune_capacitance",
     "DSSModel", "discretize_rc", "spectral_radius",
     "DTPMState", "ThermalManager",
+    "ThermalSimulator", "available_fidelities", "build",
+    "register_fidelity",
     "FVMReference", "VoxelModel", "voxelize",
     "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",

@@ -1,0 +1,120 @@
+"""Vectorized RC-network assembly machinery (geometry -> adjacency).
+
+The seed implementation discovered node neighbors with O(n^2) Python pair
+loops per layer; on the paper's 64-chiplet 2.5D and 16x3 3D systems that
+made *network assembly* — not the solve — the wall-clock bottleneck. This
+module replaces it with numpy sweeps:
+
+  * ``dedup_cuts``       — sorted unique edge coordinates (eps-merged)
+  * ``rasterize``        — map each elementary cell of the cut grid to the
+                           (disjoint) rectangle covering it
+  * ``adjacency_within`` — touching-neighbor pairs inside one layer, found
+                           by comparing owners across adjacent cell columns
+                           and rows
+  * ``overlap_between``  — xy-overlapping pairs across two layers, found by
+                           rasterizing both onto the union cut grid
+
+Pair discovery is O(cells + E log E) (the log from coordinate sorts and the
+pair dedup); conductance values are then computed from the matched rects'
+own coordinates with exactly the seed's formulas, so the assembled network
+is bitwise-identical to the reference loop builder (see
+``core/assembly_ref.py`` and ``tests/test_network_assembly.py``).
+
+Everything here is plain numpy on flat arrays with no geometry imports.
+``rc_model.build_network`` drives all of it; ``geometry.discretize`` keeps
+its own (also vectorized) background-cell rectangulation because its cell
+semantics must stay bitwise-identical to the seed's exact-float cut dedup,
+which differs from the eps-merged cuts used here.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+_EPS = 1e-12
+
+
+def dedup_cuts(vals: np.ndarray, eps: float = _EPS) -> np.ndarray:
+    """Sorted unique coordinates with values closer than eps merged."""
+    v = np.sort(np.asarray(vals, dtype=np.float64).ravel())
+    if v.size == 0:
+        return v
+    keep = np.empty(v.shape, dtype=bool)
+    keep[0] = True
+    np.greater(np.diff(v), eps, out=keep[1:])
+    return v[keep]
+
+
+def cut_index(cuts: np.ndarray, coords: np.ndarray,
+              eps: float = _EPS) -> np.ndarray:
+    """Index in the deduped cut array of each coordinate (within eps)."""
+    return np.searchsorted(cuts, np.asarray(coords, np.float64) - eps)
+
+
+def rasterize(x0, x1, y0, y1, xcuts: np.ndarray, ycuts: np.ndarray,
+              eps: float = _EPS) -> np.ndarray:
+    """owner[ix, iy] = index of the rect covering that elementary cell.
+
+    Rects must be pairwise disjoint; uncovered cells get -1. The fill is
+    one slice assignment per rect — O(n_rects) Python iterations, not
+    O(n_rects^2) pairs.
+    """
+    owner = np.full((len(xcuts) - 1, len(ycuts) - 1), -1, dtype=np.int64)
+    ix0 = cut_index(xcuts, x0, eps)
+    ix1 = cut_index(xcuts, x1, eps)
+    iy0 = cut_index(ycuts, y0, eps)
+    iy1 = cut_index(ycuts, y1, eps)
+    for r in range(len(ix0)):
+        owner[ix0[r]:ix1[r], iy0[r]:iy1[r]] = r
+    return owner
+
+
+def _unique_pairs(ii: np.ndarray, jj: np.ndarray, nj: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Dedup (i, j) index pairs (cells of one pair appear many times)."""
+    if ii.size == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    key = np.unique(ii.astype(np.int64) * nj + jj)
+    return key // nj, key % nj
+
+
+def adjacency_within(x0, x1, y0, y1, eps: float = _EPS):
+    """Touching-neighbor pairs among disjoint rects in one plane.
+
+    Returns ``((xi, xj), (yi, yj))``: pairs adjacent across a shared
+    vertical edge (``x1[xi] == x0[xj]`` with positive y-overlap) and across
+    a shared horizontal edge. Each unordered pair appears once, oriented
+    left-to-right / bottom-to-top.
+    """
+    n = len(x0)
+    xcuts = dedup_cuts(np.concatenate([x0, x1]), eps)
+    ycuts = dedup_cuts(np.concatenate([y0, y1]), eps)
+    owner = rasterize(x0, x1, y0, y1, xcuts, ycuts, eps)
+
+    a, b = owner[:-1, :], owner[1:, :]
+    m = (a >= 0) & (b >= 0) & (a != b)
+    x_pairs = _unique_pairs(a[m], b[m], n)
+
+    a, b = owner[:, :-1], owner[:, 1:]
+    m = (a >= 0) & (b >= 0) & (a != b)
+    y_pairs = _unique_pairs(a[m], b[m], n)
+    return x_pairs, y_pairs
+
+
+def overlap_between(ax0, ax1, ay0, ay1, bx0, bx1, by0, by1,
+                    eps: float = _EPS):
+    """(i, j) pairs of xy-overlapping rects across two disjoint sets.
+
+    Both sets are rasterized onto the union cut grid; a pair overlaps iff
+    it shares at least one elementary cell (cells narrower than eps are
+    merged away, matching the seed's strict ``overlap > eps`` test).
+    """
+    nb = len(bx0)
+    xcuts = dedup_cuts(np.concatenate([ax0, ax1, bx0, bx1]), eps)
+    ycuts = dedup_cuts(np.concatenate([ay0, ay1, by0, by1]), eps)
+    oa = rasterize(ax0, ax1, ay0, ay1, xcuts, ycuts, eps)
+    ob = rasterize(bx0, bx1, by0, by1, xcuts, ycuts, eps)
+    m = (oa >= 0) & (ob >= 0)
+    return _unique_pairs(oa[m], ob[m], nb)

@@ -1,0 +1,111 @@
+"""Reference (seed) O(n^2) network assembly, kept for equivalence checks.
+
+This is the original pair-loop builder that ``core/assembly.py`` replaced.
+It is retained verbatim so ``tests/test_network_assembly.py`` can assert
+the vectorized path reproduces it bitwise and ``benchmarks/exec_time.py``
+can report the assembly speedup across PRs. Never import this from the
+production path — it is quadratic in nodes per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .geometry import NodeGrid, Package, discretize
+from .rc_model import RCNetwork
+
+_EPS = 1e-12
+
+
+def _lateral_g_ref(grid: NodeGrid, i: int, j: int, axis: str) -> float:
+    """Series half-resistance conductance between lateral neighbors."""
+    if axis == "x":
+        li = grid.x1[i] - grid.x0[i]
+        lj = grid.x1[j] - grid.x0[j]
+        ov = min(grid.y1[i], grid.y1[j]) - max(grid.y0[i], grid.y0[j])
+        ki, kj = grid.kx[i], grid.kx[j]
+    else:
+        li = grid.y1[i] - grid.y0[i]
+        lj = grid.y1[j] - grid.y0[j]
+        ov = min(grid.x1[i], grid.x1[j]) - max(grid.x0[i], grid.x0[j])
+        ki, kj = grid.ky[i], grid.ky[j]
+    if ov <= _EPS:
+        return 0.0
+    area = ov * grid.lz[i]  # same layer -> same thickness
+    r = 0.5 * li / (ki * area) + 0.5 * lj / (kj * area)
+    return 1.0 / r
+
+
+def build_network_ref(pkg: Package, grid: Optional[NodeGrid] = None,
+                      cap_multipliers: Optional[dict] = None) -> RCNetwork:
+    """Seed ``build_network``: O(n^2) Python pair loops per layer."""
+    if grid is None:
+        grid = discretize(pkg)
+    n = grid.n
+    C = grid.cv * grid.volume
+    if cap_multipliers:
+        for li, mult in cap_multipliers.items():
+            C = np.where(grid.layer == li, C * mult, C)
+
+    rows, cols, gvals = [], [], []
+
+    # --- lateral neighbors within each layer -------------------------------
+    for li in range(grid.n_layers):
+        idx = np.nonzero(grid.layer == li)[0]
+        for a in range(len(idx)):
+            i = idx[a]
+            for b in range(a + 1, len(idx)):
+                j = idx[b]
+                g = 0.0
+                if abs(grid.x1[i] - grid.x0[j]) < _EPS or \
+                        abs(grid.x1[j] - grid.x0[i]) < _EPS:
+                    g = _lateral_g_ref(grid, i, j, "x")
+                elif abs(grid.y1[i] - grid.y0[j]) < _EPS or \
+                        abs(grid.y1[j] - grid.y0[i]) < _EPS:
+                    g = _lateral_g_ref(grid, i, j, "y")
+                if g > 0.0:
+                    rows += [i, j]
+                    cols += [j, i]
+                    gvals += [g, g]
+
+    # --- vertical neighbors between adjacent layers (xy overlap) -----------
+    for li in range(grid.n_layers - 1):
+        lower = np.nonzero(grid.layer == li)[0]
+        upper = np.nonzero(grid.layer == li + 1)[0]
+        for i in lower:
+            for j in upper:
+                ox = min(grid.x1[i], grid.x1[j]) - max(grid.x0[i],
+                                                       grid.x0[j])
+                oy = min(grid.y1[i], grid.y1[j]) - max(grid.y0[i],
+                                                       grid.y0[j])
+                if ox <= _EPS or oy <= _EPS:
+                    continue
+                area = ox * oy
+                r = 0.5 * grid.lz[i] / (grid.kz[i] * area) + \
+                    0.5 * grid.lz[j] / (grid.kz[j] * area)
+                g = 1.0 / r
+                rows += [i, j]
+                cols += [j, i]
+                gvals += [g, g]
+
+    # --- convection boundaries (both package faces; Table 1 feature) -------
+    gconv = np.zeros(n, dtype=np.float64)
+    top = grid.layer == grid.n_layers - 1
+    bot = grid.layer == 0
+    gconv[top] += pkg.htc_top * grid.area[top]
+    gconv[bot] += pkg.htc_bottom * grid.area[bot]
+
+    # --- power distribution matrix -----------------------------------------
+    S = len(grid.source_names)
+    P = np.zeros((n, S), dtype=np.float64)
+    for s in range(S):
+        nodes = np.nonzero(grid.power_idx == s)[0]
+        total = grid.area[nodes].sum()
+        P[nodes, s] = grid.area[nodes] / total
+
+    return RCNetwork(C=C,
+                     rows=np.asarray(rows, dtype=np.int32),
+                     cols=np.asarray(cols, dtype=np.int32),
+                     gvals=np.asarray(gvals, dtype=np.float64),
+                     gconv=gconv, P=P, grid=grid, t_ambient=pkg.t_ambient)

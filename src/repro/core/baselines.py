@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from .fidelity import register_fidelity
 from .geometry import Block, Layer, Package
 from .materials import Material
 from .rc_model import ThermalRCModel, build_network
@@ -60,23 +61,48 @@ def _uniform_n(pkg: Package) -> int:
     return 2 * int(round(np.sqrt(per_tier)))
 
 
-def hotspot_like(pkg: Package) -> tuple:
-    """(model, method) — uniform grid, isotropic, RK4."""
+@register_fidelity("hotspot")
+def build_hotspot(pkg: Package) -> ThermalRCModel:
+    """Uniform grid, isotropic, RK4 (bound as the default method)."""
     p = transform_package(pkg, uniform_n=_uniform_n(pkg), isotropic=True)
-    return ThermalRCModel(build_network(p)), "rk4"
+    m = ThermalRCModel(build_network(p), method="rk4")
+    m.fidelity = "hotspot"
+    return m
+
+
+@register_fidelity("3dice")
+def build_3dice(pkg: Package) -> ThermalRCModel:
+    """Non-uniform ok, single-boundary, per-step (non-prefactored) solve."""
+    p = transform_package(pkg, isotropic=True, single_boundary=True)
+    m = ThermalRCModel(build_network(p), method="be_lu")
+    m.fidelity = "3dice"
+    return m
+
+
+@register_fidelity("pact")
+def build_pact(pkg: Package) -> ThermalRCModel:
+    """Uniform grid, isotropic, TRAP solver, single-boundary."""
+    p = transform_package(pkg, uniform_n=_uniform_n(pkg), isotropic=True,
+                          single_boundary=True)
+    m = ThermalRCModel(build_network(p), method="trap")
+    m.fidelity = "pact"
+    return m
+
+
+def hotspot_like(pkg: Package) -> tuple:
+    """(model, method) — back-compat wrapper over the registry builder."""
+    m = build_hotspot(pkg)
+    return m, m.default_method
 
 
 def threedice_like(pkg: Package) -> tuple:
-    """(model, method) — non-uniform ok, single-boundary, per-step solve."""
-    p = transform_package(pkg, isotropic=True, single_boundary=True)
-    return ThermalRCModel(build_network(p)), "be_lu"
+    m = build_3dice(pkg)
+    return m, m.default_method
 
 
 def pact_like(pkg: Package) -> tuple:
-    """(model, method) — uniform grid, isotropic, TRAP solver."""
-    p = transform_package(pkg, uniform_n=_uniform_n(pkg), isotropic=True,
-                          single_boundary=True)
-    return ThermalRCModel(build_network(p)), "trap"
+    m = build_pact(pkg)
+    return m, m.default_method
 
 
 BASELINES = {

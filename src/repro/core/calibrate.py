@@ -17,19 +17,19 @@ from typing import Optional
 import numpy as np
 from scipy import optimize
 
-from .fvm_ref import FVMReference, voxelize
+from .fidelity import build
 from .geometry import Package
-from .rc_model import ThermalRCModel, build_network
+from .rc_model import build_network
 from .workloads import wl1
 
 
 def reference_transient(pkg: Package, q_traj: np.ndarray, dt: float,
                         dx: float = 0.5e-3):
     """FVM reference chiplet temperatures for a power trace."""
-    fvm = FVMReference(voxelize(pkg, dx_target=dx))
+    fvm = build(pkg, "fvm", dx_target=dx)
     sim = fvm.make_simulator(dt)
-    obs, _ = sim(fvm.zero_state(), q_traj)
-    return np.asarray(obs), fvm.vm.obs_tags
+    obs = sim(fvm.zero_state(), q_traj)
+    return np.asarray(obs), fvm.tags
 
 
 def tune_capacitance(pkg: Package, dt: float = 0.01,
@@ -43,8 +43,7 @@ def tune_capacitance(pkg: Package, dt: float = 0.01,
     required").
     """
     n_layers = len(pkg.layers)
-    net0 = build_network(pkg)
-    n_src = net0.n_sources
+    n_src = build_network(pkg).n_sources
     if q_traj is None:
         q_traj = wl1(n_src, dt=dt, t_stress=2.0, t_prbs=4.0, t_cool=3.0)
     if ref_obs is None:
@@ -54,7 +53,7 @@ def tune_capacitance(pkg: Package, dt: float = 0.01,
 
     def mae_for(log_mults: np.ndarray) -> float:
         mults = {li: float(np.exp(m)) for li, m in enumerate(log_mults)}
-        model = ThermalRCModel(build_network(pkg, cap_multipliers=mults))
+        model = build(pkg, "rc", cap_multipliers=mults)
         sim = model.make_simulator(dt)
         obs = np.asarray(sim(model.zero_state(), q_traj))
         err = float(np.mean(np.abs(obs - ref_obs)))

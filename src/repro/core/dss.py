@@ -19,13 +19,16 @@ maintained.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.dss_step.ops import dss_rollout, dss_step
-from .rc_model import ThermalRCModel
+from .fidelity import register_fidelity
+from .geometry import Package
+from .rc_model import ThermalRCModel, build_model
 
 
 @dataclasses.dataclass
@@ -37,6 +40,12 @@ class DSSModel:
     H: jnp.ndarray         # (n_obs, N) observation
     ts: float
     t_ambient: float
+    tags: list = dataclasses.field(default_factory=list)
+    source_names: list = dataclasses.field(default_factory=list)
+    rc: Optional[ThermalRCModel] = None  # parent model, for regeneration
+    _regen_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    fidelity = "dss"
 
     @property
     def n(self) -> int:
@@ -61,16 +70,63 @@ class DSSModel:
         return thetas @ self.H.T + self.t_ambient
 
     def simulate_batch(self, theta0: jnp.ndarray, q_traj: jnp.ndarray,
+                       dt: Optional[float] = None,
                        backend: str = "auto") -> jnp.ndarray:
         """Batched-DSE rollout: theta0 (B,N), q_traj (T,B,S) -> (T,B,n_obs).
 
         The CPU implementation in the paper evaluates one trace at a time;
         batching candidate configurations through one GEMM is the TPU-native
-        speedup (DESIGN.md §2).
+        speedup (DESIGN.md §2). ``dt`` other than the built ``ts``
+        regenerates from the parent RC model (milliseconds).
         """
+        if dt is not None and abs(dt - self.ts) > 1e-12:
+            return self._regenerated(dt).simulate_batch(
+                theta0, q_traj, backend=backend)
         thetas = dss_rollout(theta0, q_traj, self.ad_t, self.bd_t,
                              backend=backend)
         return jnp.einsum("tbn,on->tbo", thetas, self.H) + self.t_ambient
+
+    # -- common ThermalSimulator protocol -----------------------------------
+    def _regenerated(self, ts: float) -> "DSSModel":
+        if self.rc is None:
+            raise ValueError(
+                f"DSS model built for ts={self.ts} has no parent RC model "
+                f"to regenerate at ts={ts}")
+        key = round(ts, 12)  # match the 1e-12 dt tolerance of the callers
+        if key not in self._regen_cache:  # expm is O(N^3); pay it once
+            if len(self._regen_cache) >= 8:  # bound long-lived processes
+                self._regen_cache.pop(next(iter(self._regen_cache)))
+            self._regen_cache[key] = discretize_rc(self.rc, ts=ts,
+                                                   dtype=self.ad.dtype)
+        return self._regen_cache[key]
+
+    def steady_state(self, q_src) -> jnp.ndarray:
+        """ZOH fixed point: solve (I - Ad) theta = Bd q (host float64)."""
+        ad = np.asarray(self.ad, np.float64)
+        bd = np.asarray(self.bd, np.float64)
+        q = np.asarray(q_src, np.float64)
+        theta = np.linalg.solve(np.eye(self.n) - ad, bd @ q)
+        return jnp.asarray(theta, self.ad.dtype)
+
+    def observe(self, theta) -> jnp.ndarray:
+        """Absolute temperature at the observation tags (self.tags order)."""
+        return self.H @ theta + self.t_ambient
+
+    def make_simulator(self, dt: Optional[float] = None,
+                       backend: str = "auto"):
+        """simulate(theta0, q_traj[T,S]) -> (T, n_obs) at sampling period
+        dt (defaults to the built ts; other dt regenerates — paper §4.4)."""
+        if dt is not None and abs(dt - self.ts) > 1e-12:
+            return self._regenerated(dt).make_simulator(backend=backend)
+
+        def simulate(theta0, q_traj):
+            return self.simulate(theta0, q_traj, backend=backend)
+
+        return simulate
+
+    def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
+        shape = (self.n,) if batch is None else (batch, self.n)
+        return jnp.zeros(shape, self.ad.dtype)
 
 
 def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
@@ -92,7 +148,16 @@ def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
     bd_j = jnp.asarray(bd, dtype)
     return DSSModel(ad=ad_j, bd=bd_j, ad_t=jnp.asarray(ad.T, dtype),
                     bd_t=jnp.asarray(bd.T, dtype), H=rc.H, ts=ts,
-                    t_ambient=rc.t_ambient)
+                    t_ambient=rc.t_ambient, tags=list(rc.tags),
+                    source_names=list(rc.source_names), rc=rc)
+
+
+@register_fidelity("dss")
+def build_dss(pkg: Package, ts: float = 0.01, cap_multipliers=None,
+              dtype=jnp.float32) -> DSSModel:
+    """Registry builder: package -> RC network -> exact-ZOH DSS model."""
+    return discretize_rc(build_model(pkg, cap_multipliers=cap_multipliers),
+                         ts=ts, dtype=dtype)
 
 
 def _expm(a: np.ndarray) -> np.ndarray:

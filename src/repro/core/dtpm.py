@@ -33,6 +33,18 @@ class ThermalManager:
     up: float = 1.03          # recovery rate
     min_throttle: float = 0.3
 
+    @classmethod
+    def from_package(cls, pkg, ts: float = 0.01, build_opts: dict = None,
+                     **control) -> "ThermalManager":
+        """Build the controller's DSS model through the fidelity registry.
+
+        ``build_opts`` go to ``fidelity.build(pkg, "dss", ts=ts, ...)``;
+        remaining keywords are controller parameters (t_max, t_target, ...).
+        """
+        from .fidelity import build
+        dss = build(pkg, "dss", **{"ts": ts, **(build_opts or {})})
+        return cls(dss=dss, **control)
+
     def init_state(self) -> DTPMState:
         return DTPMState(theta=jnp.zeros((self.dss.n,), jnp.float32),
                          throttle=jnp.ones((), jnp.float32),

@@ -1,0 +1,81 @@
+"""Fidelity registry and the common ``ThermalSimulator`` protocol.
+
+MFIT's value proposition (paper Fig. 2) is swapping model fidelities per
+design stage — FEM-class reference for validation, thermal RC for design
+iteration, DSS for runtime management — over ONE geometry description.
+This module makes that swap a string:
+
+    from repro.core import build
+    sim = build(pkg, fidelity="rc")           # or "fvm", "dss",
+                                              # "hotspot", "3dice", "pact"
+    theta = sim.steady_state(q)               # fidelity-native state
+    temps = sim.observe(theta)                # (n_obs,) absolute degC,
+                                              # shared tag ordering
+    roll = sim.make_simulator(dt)             # sim(state0, q[T,S]) -> (T,O)
+    batch = sim.simulate_batch(th0, q, dt)    # (T,B,S) -> (T,B,O)
+
+Every registered fidelity exposes the same observation-tag ordering
+(``sim.tags``, lexicographically sorted), so outputs are directly
+comparable across the ladder — the property the accuracy benchmarks and
+cross-fidelity tests rely on.
+
+Model modules register themselves via ``@register_fidelity(name)`` at
+import time; ``build()`` imports them lazily to avoid import cycles.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class ThermalSimulator(Protocol):
+    """What every fidelity must expose (see module docstring for shapes)."""
+
+    fidelity: str                 # registry name of this model family
+    tags: List[str]               # observation tags, shared sorted order
+    source_names: List[str]       # power-source order of the q vector
+
+    def zero_state(self, batch=None): ...
+
+    def steady_state(self, q_src): ...          # -> fidelity-native state
+
+    def observe(self, state): ...               # state -> (n_obs,) degC
+
+    def make_simulator(self, dt): ...           # -> sim(state0, q[T, S])
+
+    def simulate_batch(self, theta0, q_traj, dt): ...  # (T,B,S) -> (T,B,O)
+
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_fidelity(name: str):
+    """Decorator: register ``builder(pkg, **opts) -> ThermalSimulator``."""
+    def deco(builder: Callable):
+        _REGISTRY[name] = builder
+        return builder
+    return deco
+
+
+def _ensure_registered() -> None:
+    # Registration happens as an import side effect of each model module.
+    from . import baselines, dss, fvm_ref, rc_model  # noqa: F401
+
+
+def available_fidelities() -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def build(pkg, fidelity: str = "rc", **opts) -> "ThermalSimulator":
+    """Build a thermal simulator for ``pkg`` at the named fidelity.
+
+    Extra keyword options are forwarded to the fidelity's builder (e.g.
+    ``dx_target`` for "fvm", ``cap_multipliers`` for "rc", ``ts`` for
+    "dss") on top of its registered defaults.
+    """
+    _ensure_registered()
+    if fidelity not in _REGISTRY:
+        raise KeyError(f"unknown fidelity {fidelity!r}; available: "
+                       f"{', '.join(sorted(_REGISTRY))}")
+    return _REGISTRY[fidelity](pkg, **opts)

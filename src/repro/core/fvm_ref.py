@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .fidelity import register_fidelity
 from .geometry import Package
 
 
@@ -46,6 +47,7 @@ class VoxelModel:
     obs: jnp.ndarray          # (n_obs, nz, ny, nx) observation weights
     obs_tags: list
     t_ambient: float
+    source_names: list = dataclasses.field(default_factory=list)
 
     @property
     def shape(self):
@@ -141,15 +143,21 @@ def voxelize(pkg: Package, dx_target: float = 0.5e-3,
                       layer_of_slab=np.array(layer_of_slab),
                       cvol=f32(cvol), gx=f32(gx), gy=f32(gy), gz=f32(gz),
                       conv=f32(conv), src=f32(src), obs=f32(obs),
-                      obs_tags=obs_tags, t_ambient=pkg.t_ambient)
+                      obs_tags=obs_tags, t_ambient=pkg.t_ambient,
+                      source_names=source_names)
 
 
 class FVMReference:
     """Jitted transient/steady conduction solver on a VoxelModel."""
 
+    fidelity = "fvm"
+
     def __init__(self, vm: VoxelModel, cg_tol: float = 1e-6,
                  cg_maxiter: int = 400):
         self.vm = vm
+        self.tags = list(vm.obs_tags)
+        self.source_names = list(vm.source_names)
+        self._batch_sims = {}
         self.cg_tol = cg_tol
         self.cg_maxiter = cg_maxiter
         gx, gy, gz, conv = vm.gx, vm.gy, vm.gz, vm.conv
@@ -189,9 +197,13 @@ class FVMReference:
             M=lambda x: x / diag)
         return sol
 
+    def observe(self, theta: jnp.ndarray) -> jnp.ndarray:
+        """Absolute temperature at the observation tags (self.tags order)."""
+        return jnp.einsum("ozyx,zyx->o", self.vm.obs, theta) \
+            + self.vm.t_ambient
+
     def make_simulator(self, dt: float):
-        """Jitted simulate(theta0, q_traj[T,S]) -> (obs_temps[T,n_obs],
-        theta_final)."""
+        """Jitted simulate(theta0, q_traj[T,S]) -> obs_temps[T,n_obs]."""
         vm = self.vm
         cdt = vm.cvol / dt
         diag = cdt + self._neg_l_diag
@@ -212,13 +224,22 @@ class FVMReference:
                 obs = jnp.einsum("ozyx,zyx->o", vm.obs, th)
                 return th, obs
 
-            thf, obs = jax.lax.scan(body, theta0.astype(jnp.float32), q_traj)
-            return obs + vm.t_ambient, thf
+            _, obs = jax.lax.scan(body, theta0.astype(jnp.float32), q_traj)
+            return obs + vm.t_ambient
 
         return simulate
 
-    def zero_state(self) -> jnp.ndarray:
-        return jnp.zeros(self.vm.shape, jnp.float32)
+    def simulate_batch(self, theta0, q_traj, dt: float) -> jnp.ndarray:
+        """Batched rollout: theta0 (B,*shape), q_traj (T,B,S) -> (T,B,O)."""
+        if dt not in self._batch_sims:  # keep jit cache warm across calls
+            sim = self.make_simulator(dt)
+            self._batch_sims[dt] = jax.vmap(sim, in_axes=(0, 1),
+                                            out_axes=1)
+        return self._batch_sims[dt](theta0, q_traj)
+
+    def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
+        shape = self.vm.shape if batch is None else (batch, *self.vm.shape)
+        return jnp.zeros(shape, jnp.float32)
 
     def slab_mean_temp(self, theta: jnp.ndarray, layer_idx: int,
                        which: str = "all") -> float:
@@ -229,3 +250,12 @@ class FVMReference:
         elif which == "bottom":
             zs = zs[:1]
         return float(jnp.mean(theta[jnp.asarray(zs)]) + self.vm.t_ambient)
+
+
+@register_fidelity("fvm")
+def build_fvm(pkg: Package, dx_target: float = 0.5e-3,
+              dz_target: float = 0.15e-3, max_slabs: int = 6,
+              cg_tol: float = 1e-6, cg_maxiter: int = 400) -> FVMReference:
+    return FVMReference(voxelize(pkg, dx_target=dx_target,
+                                 dz_target=dz_target, max_slabs=max_slabs),
+                        cg_tol=cg_tol, cg_maxiter=cg_maxiter)

@@ -106,18 +106,26 @@ class NodeGrid:
                         dtype=np.int32)
 
 
-def _layer_nodes(layer: Layer, L: float, W: float, eps: float = 1e-12):
-    """Discretize one layer. Returns list of node dicts."""
-    nodes = []
+def _grid_rects(xs: np.ndarray, ys: np.ndarray):
+    """All cells of a cut grid as flat rect arrays, x-major (legacy order)."""
+    nx, ny = len(xs) - 1, len(ys) - 1
+    return (np.repeat(xs[:-1], ny), np.repeat(xs[1:], ny),
+            np.tile(ys[:-1], nx), np.tile(ys[1:], nx))
+
+
+def _layer_segments(layer: Layer, L: float, W: float, eps: float = 1e-12):
+    """Discretize one layer into homogeneous segments (vectorized).
+
+    Each segment is ``(x0, x1, y0, y1, material, power_name, tag)`` with
+    flat rect arrays — one segment per block plus one for the background —
+    so `discretize` never touches per-node Python records.
+    """
+    segs = []
     if not layer.blocks:
         xs = np.linspace(0.0, L, layer.nx + 1)
         ys = np.linspace(0.0, W, layer.ny + 1)
-        for i in range(layer.nx):
-            for j in range(layer.ny):
-                nodes.append(dict(x0=xs[i], x1=xs[i + 1], y0=ys[j],
-                                  y1=ys[j + 1], mat=layer.material,
-                                  power=None, tag=""))
-        return nodes
+        segs.append((*_grid_rects(xs, ys), layer.material, None, ""))
+        return segs
 
     # Non-homogeneous layer: blocks generate their own sub-grids; the
     # remaining background area is rectangulated by the union of all block
@@ -125,54 +133,68 @@ def _layer_nodes(layer: Layer, L: float, W: float, eps: float = 1e-12):
     for b in layer.blocks:
         xs = np.linspace(b.x0, b.x1, b.nx + 1)
         ys = np.linspace(b.y0, b.y1, b.ny + 1)
-        for i in range(b.nx):
-            for j in range(b.ny):
-                nodes.append(dict(x0=xs[i], x1=xs[i + 1], y0=ys[j],
-                                  y1=ys[j + 1], mat=b.material,
-                                  power=b.power_name, tag=b.tag))
-    xcuts = sorted({0.0, L} | {b.x0 for b in layer.blocks}
-                   | {b.x1 for b in layer.blocks})
-    ycuts = sorted({0.0, W} | {b.y0 for b in layer.blocks}
-                   | {b.y1 for b in layer.blocks})
-    for i in range(len(xcuts) - 1):
-        for j in range(len(ycuts) - 1):
-            cx = 0.5 * (xcuts[i] + xcuts[i + 1])
-            cy = 0.5 * (ycuts[j] + ycuts[j + 1])
-            inside = any(b.x0 - eps <= cx <= b.x1 + eps
-                         and b.y0 - eps <= cy <= b.y1 + eps
-                         for b in layer.blocks)
-            if not inside and xcuts[i + 1] - xcuts[i] > eps \
-                    and ycuts[j + 1] - ycuts[j] > eps:
-                nodes.append(dict(x0=xcuts[i], x1=xcuts[i + 1], y0=ycuts[j],
-                                  y1=ycuts[j + 1], mat=layer.material,
-                                  power=None, tag=""))
-    return nodes
+        segs.append((*_grid_rects(xs, ys), b.material, b.power_name, b.tag))
+    xcuts = np.unique(np.array([0.0, L]
+                               + [c for b in layer.blocks
+                                  for c in (b.x0, b.x1)]))
+    ycuts = np.unique(np.array([0.0, W]
+                               + [c for b in layer.blocks
+                                  for c in (b.y0, b.y1)]))
+    cx = 0.5 * (xcuts[:-1] + xcuts[1:])[:, None]
+    cy = 0.5 * (ycuts[:-1] + ycuts[1:])[None, :]
+    inside = np.zeros((len(xcuts) - 1, len(ycuts) - 1), dtype=bool)
+    for b in layer.blocks:
+        inside |= ((b.x0 - eps <= cx) & (cx <= b.x1 + eps)
+                   & (b.y0 - eps <= cy) & (cy <= b.y1 + eps))
+    keep = (~inside & (np.diff(xcuts)[:, None] > eps)
+            & (np.diff(ycuts)[None, :] > eps)).ravel()  # x-major, as cells
+    x0g, x1g, y0g, y1g = _grid_rects(xcuts, ycuts)
+    segs.append((x0g[keep], x1g[keep], y0g[keep], y1g[keep],
+                 layer.material, None, ""))
+    return segs
 
 
 def discretize(pkg: Package) -> NodeGrid:
     """Build the flat node grid for the whole package (paper §4.3)."""
-    recs = []
+    cols = {k: [] for k in ("x0", "x1", "y0", "y1", "lz", "layer",
+                            "kx", "ky", "kz", "cv")}
+    pnames: list = []
+    tags: list = []
     source_names: list = []
     for li, layer in enumerate(pkg.layers):
-        for nd in _layer_nodes(layer, pkg.length, pkg.width):
-            m: Material = nd["mat"]
-            pname = nd["power"]
+        for x0, x1, y0, y1, m, pname, tag in _layer_segments(
+                layer, pkg.length, pkg.width):
+            cnt = len(x0)
+            if cnt == 0:
+                continue
+            cols["x0"].append(x0)
+            cols["x1"].append(x1)
+            cols["y0"].append(y0)
+            cols["y1"].append(y1)
+            cols["lz"].append(np.full(cnt, layer.thickness))
+            cols["layer"].append(np.full(cnt, li, dtype=np.int32))
+            cols["kx"].append(np.full(cnt, m.kx))
+            cols["ky"].append(np.full(cnt, m.ky))
+            cols["kz"].append(np.full(cnt, m.kz))
+            cols["cv"].append(np.full(cnt, m.cv))
             if pname is not None and pname not in source_names:
                 source_names.append(pname)
-            recs.append((nd["x0"], nd["x1"], nd["y0"], nd["y1"],
-                         layer.thickness, li, m.kx, m.ky, m.kz, m.cv,
-                         pname, nd["tag"]))
+            pnames += [pname] * cnt
+            tags += [tag] * cnt
     source_names = sorted(source_names)
     sidx = {s: i for i, s in enumerate(source_names)}
-    arr = lambda k: np.array([r[k] for r in recs], dtype=np.float64)
+    cat = lambda k, dt: np.concatenate(cols[k]).astype(dt, copy=False)
     return NodeGrid(
-        x0=arr(0), x1=arr(1), y0=arr(2), y1=arr(3), lz=arr(4),
-        layer=np.array([r[5] for r in recs], dtype=np.int32),
-        kx=arr(6), ky=arr(7), kz=arr(8), cv=arr(9),
-        power_idx=np.array([sidx.get(r[10], -1) for r in recs],
+        x0=cat("x0", np.float64), x1=cat("x1", np.float64),
+        y0=cat("y0", np.float64), y1=cat("y1", np.float64),
+        lz=cat("lz", np.float64),
+        layer=cat("layer", np.int32),
+        kx=cat("kx", np.float64), ky=cat("ky", np.float64),
+        kz=cat("kz", np.float64), cv=cat("cv", np.float64),
+        power_idx=np.array([sidx.get(p, -1) for p in pnames],
                            dtype=np.int32),
         source_names=source_names,
-        tags=[r[11] for r in recs],
+        tags=tags,
         n_layers=len(pkg.layers),
     )
 

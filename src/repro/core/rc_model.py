@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .assembly import adjacency_within, overlap_between
+from .fidelity import register_fidelity
 from .geometry import NodeGrid, Package, chiplet_tags, discretize
 
 _EPS = 1e-12
@@ -61,20 +63,21 @@ class RCNetwork:
         return G
 
 
-def _lateral_g(grid: NodeGrid, i: int, j: int, axis: str) -> float:
-    """Series half-resistance conductance between lateral neighbors."""
+def _lateral_gvals(grid: NodeGrid, i: np.ndarray, j: np.ndarray,
+                   axis: str) -> np.ndarray:
+    """Series half-resistance conductances between lateral neighbor pairs."""
     if axis == "x":
         li = grid.x1[i] - grid.x0[i]
         lj = grid.x1[j] - grid.x0[j]
-        ov = min(grid.y1[i], grid.y1[j]) - max(grid.y0[i], grid.y0[j])
+        ov = np.minimum(grid.y1[i], grid.y1[j]) \
+            - np.maximum(grid.y0[i], grid.y0[j])
         ki, kj = grid.kx[i], grid.kx[j]
     else:
         li = grid.y1[i] - grid.y0[i]
         lj = grid.y1[j] - grid.y0[j]
-        ov = min(grid.x1[i], grid.x1[j]) - max(grid.x0[i], grid.x0[j])
+        ov = np.minimum(grid.x1[i], grid.x1[j]) \
+            - np.maximum(grid.x0[i], grid.x0[j])
         ki, kj = grid.ky[i], grid.ky[j]
-    if ov <= _EPS:
-        return 0.0
     area = ov * grid.lz[i]  # same layer -> same thickness
     r = 0.5 * li / (ki * area) + 0.5 * lj / (kj * area)
     return 1.0 / r
@@ -83,6 +86,12 @@ def _lateral_g(grid: NodeGrid, i: int, j: int, axis: str) -> float:
 def build_network(pkg: Package, grid: Optional[NodeGrid] = None,
                   cap_multipliers: Optional[dict] = None) -> RCNetwork:
     """Assemble the RC network from the package geometry.
+
+    Neighbor discovery is the vectorized O(E log E) sweep of
+    ``core/assembly.py`` (the seed's O(n^2) pair loops are preserved in
+    ``core/assembly_ref.py`` for equivalence testing only); conductances are
+    then evaluated from the matched rects' coordinates, so the result is
+    bitwise-identical to the reference builder.
 
     cap_multipliers: optional {layer_index: float} from capacitance tuning
     (paper §4.3 "Capacitance Tuning").
@@ -95,46 +104,46 @@ def build_network(pkg: Package, grid: Optional[NodeGrid] = None,
         for li, mult in cap_multipliers.items():
             C = np.where(grid.layer == li, C * mult, C)
 
-    rows, cols, gvals = [], [], []
+    rows, cols, gvals = [], [], []  # per-layer COO chunks
+
+    def _emit(i, j, g):
+        if len(i):
+            rows.append(np.concatenate([i, j]))
+            cols.append(np.concatenate([j, i]))
+            gvals.append(np.concatenate([g, g]))
+
+    layer_nodes = [np.nonzero(grid.layer == li)[0]
+                   for li in range(grid.n_layers)]
 
     # --- lateral neighbors within each layer -------------------------------
     for li in range(grid.n_layers):
-        idx = np.nonzero(grid.layer == li)[0]
-        for a in range(len(idx)):
-            i = idx[a]
-            for b in range(a + 1, len(idx)):
-                j = idx[b]
-                g = 0.0
-                if abs(grid.x1[i] - grid.x0[j]) < _EPS or \
-                        abs(grid.x1[j] - grid.x0[i]) < _EPS:
-                    g = _lateral_g(grid, i, j, "x")
-                elif abs(grid.y1[i] - grid.y0[j]) < _EPS or \
-                        abs(grid.y1[j] - grid.y0[i]) < _EPS:
-                    g = _lateral_g(grid, i, j, "y")
-                if g > 0.0:
-                    rows += [i, j]
-                    cols += [j, i]
-                    gvals += [g, g]
+        idx = layer_nodes[li]
+        if idx.size == 0:
+            continue
+        (xi, xj), (yi, yj) = adjacency_within(
+            grid.x0[idx], grid.x1[idx], grid.y0[idx], grid.y1[idx], _EPS)
+        for pi, pj, axis in ((xi, xj, "x"), (yi, yj, "y")):
+            i, j = idx[pi], idx[pj]
+            _emit(i, j, _lateral_gvals(grid, i, j, axis))
 
     # --- vertical neighbors between adjacent layers (xy overlap) -----------
     for li in range(grid.n_layers - 1):
-        lower = np.nonzero(grid.layer == li)[0]
-        upper = np.nonzero(grid.layer == li + 1)[0]
-        for i in lower:
-            for j in upper:
-                ox = min(grid.x1[i], grid.x1[j]) - max(grid.x0[i],
-                                                       grid.x0[j])
-                oy = min(grid.y1[i], grid.y1[j]) - max(grid.y0[i],
-                                                       grid.y0[j])
-                if ox <= _EPS or oy <= _EPS:
-                    continue
-                area = ox * oy
-                r = 0.5 * grid.lz[i] / (grid.kz[i] * area) + \
-                    0.5 * grid.lz[j] / (grid.kz[j] * area)
-                g = 1.0 / r
-                rows += [i, j]
-                cols += [j, i]
-                gvals += [g, g]
+        lower, upper = layer_nodes[li], layer_nodes[li + 1]
+        if lower.size == 0 or upper.size == 0:
+            continue
+        pi, pj = overlap_between(
+            grid.x0[lower], grid.x1[lower], grid.y0[lower], grid.y1[lower],
+            grid.x0[upper], grid.x1[upper], grid.y0[upper], grid.y1[upper],
+            _EPS)
+        i, j = lower[pi], upper[pj]
+        ox = np.minimum(grid.x1[i], grid.x1[j]) \
+            - np.maximum(grid.x0[i], grid.x0[j])
+        oy = np.minimum(grid.y1[i], grid.y1[j]) \
+            - np.maximum(grid.y0[i], grid.y0[j])
+        area = ox * oy
+        r = 0.5 * grid.lz[i] / (grid.kz[i] * area) + \
+            0.5 * grid.lz[j] / (grid.kz[j] * area)
+        _emit(i, j, 1.0 / r)
 
     # --- convection boundaries (both package faces; Table 1 feature) -------
     gconv = np.zeros(n, dtype=np.float64)
@@ -151,10 +160,12 @@ def build_network(pkg: Package, grid: Optional[NodeGrid] = None,
         total = grid.area[nodes].sum()
         P[nodes, s] = grid.area[nodes] / total
 
+    cat = lambda parts, dt: (np.concatenate(parts).astype(dt) if parts
+                             else np.zeros(0, dtype=dt))
     return RCNetwork(C=C,
-                     rows=np.asarray(rows, dtype=np.int32),
-                     cols=np.asarray(cols, dtype=np.int32),
-                     gvals=np.asarray(gvals, dtype=np.float64),
+                     rows=cat(rows, np.int32),
+                     cols=cat(cols, np.int32),
+                     gvals=cat(gvals, np.float64),
                      gconv=gconv, P=P, grid=grid, t_ambient=pkg.t_ambient)
 
 
@@ -190,13 +201,20 @@ class ThermalRCModel:
       'rk4'     — explicit RK4 with stability substepping (HotSpot-like)
     """
 
-    def __init__(self, net: RCNetwork, dtype=jnp.float32):
+    fidelity = "rc"
+
+    def __init__(self, net: RCNetwork, dtype=jnp.float32,
+                 method: str = "be_chol"):
         self.net = net
         self.dtype = dtype
+        self.default_method = method
+        self.tags = sorted({t for t in net.grid.tags if t})
+        self.source_names = list(net.grid.source_names)
+        self._batch_sims = {}
         self.C = jnp.asarray(net.C, dtype)
         self.G = jnp.asarray(net.g_dense(), dtype)
         self.P = jnp.asarray(net.P, dtype)
-        self.H = jnp.asarray(observation_matrix(net), dtype)
+        self.H = jnp.asarray(observation_matrix(net, self.tags), dtype)
         self.t_ambient = net.t_ambient
         # coo copies for the matrix-free path
         self._rows = jnp.asarray(net.rows)
@@ -217,8 +235,13 @@ class ThermalRCModel:
         rhs = self.P @ jnp.asarray(q_src, self.dtype)
         return jnp.linalg.solve(-self.G, rhs)
 
-    def make_stepper(self, dt: float, method: str = "be_chol"):
+    def observe(self, theta) -> jnp.ndarray:
+        """Absolute temperature at the observation tags (self.tags order)."""
+        return self.H @ theta + self.t_ambient
+
+    def make_stepper(self, dt: float, method: Optional[str] = None):
         """Return step(theta, q_src) -> theta' (jittable)."""
+        method = method or self.default_method
         C, G, P = self.C, self.G, self.P
         n = self.net.n
         if method == "be_chol":
@@ -281,7 +304,7 @@ class ThermalRCModel:
             raise ValueError(f"unknown method {method!r}")
         return step
 
-    def make_simulator(self, dt: float, method: str = "be_chol"):
+    def make_simulator(self, dt: float, method: Optional[str] = None):
         """Return jitted simulate(theta0, q_traj[T,S]) -> obs_temps[T,n_obs].
 
         Output is absolute temperature at the chiplet observation points.
@@ -301,8 +324,19 @@ class ThermalRCModel:
 
         return simulate
 
-    def zero_state(self) -> jnp.ndarray:
-        return jnp.zeros((self.net.n,), self.dtype)
+    def simulate_batch(self, theta0, q_traj, dt: float,
+                       method: Optional[str] = None) -> jnp.ndarray:
+        """Batched rollout: theta0 (B,N), q_traj (T,B,S) -> (T,B,n_obs)."""
+        key = (dt, method or self.default_method)
+        if key not in self._batch_sims:  # keep jit cache warm across calls
+            sim = self.make_simulator(dt, method)
+            self._batch_sims[key] = jax.vmap(sim, in_axes=(0, 1),
+                                             out_axes=1)
+        return self._batch_sims[key](theta0, q_traj)
+
+    def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
+        shape = (self.net.n,) if batch is None else (batch, self.net.n)
+        return jnp.zeros(shape, self.dtype)
 
     def node_temps(self, theta) -> jnp.ndarray:
         return theta + self.t_ambient
@@ -316,7 +350,10 @@ class ThermalRCModel:
         return vals, rects
 
 
+@register_fidelity("rc")
 def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
-                dtype=jnp.float32) -> ThermalRCModel:
-    return ThermalRCModel(build_network(pkg, cap_multipliers=cap_multipliers),
-                          dtype=dtype)
+                dtype=jnp.float32, method: str = "be_chol",
+                grid: Optional[NodeGrid] = None) -> ThermalRCModel:
+    return ThermalRCModel(
+        build_network(pkg, grid=grid, cap_multipliers=cap_multipliers),
+        dtype=dtype, method=method)

@@ -19,8 +19,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import latest_step, restore, save
 from repro.configs import get_config
-from repro.core import (ThermalManager, build_model, chip_power,
-                        discretize_rc, make_tpu_tray_package)
+from repro.core import ThermalManager, chip_power, make_tpu_tray_package
 from repro.core.power import V5E, StepCost
 from repro.data.tokens import DataConfig, batch_at
 from repro.models import lm as lm_mod
@@ -67,10 +66,8 @@ def main(argv=None):
 
     thermal = None
     if args.thermal:
-        tray = make_tpu_tray_package()
-        rc = build_model(tray)
-        mgr = ThermalManager(discretize_rc(rc, ts=0.1), t_max=95.0,
-                             t_target=90.0)
+        mgr = ThermalManager.from_package(make_tpu_tray_package(), ts=0.1,
+                                          t_max=95.0, t_target=90.0)
         tstate = mgr.init_state()
         thermal = (mgr, tstate)
 

@@ -1,10 +1,14 @@
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# keep hypothesis fast on the single-core container
-settings.register_profile("ci", max_examples=15, deadline=None)
-settings.load_profile("ci")
+try:  # hypothesis is a dev-only extra; property tests auto-skip without it
+    from hypothesis import settings
+except ModuleNotFoundError:
+    settings = None
+else:
+    # keep hypothesis fast on the single-core container
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -1,14 +1,13 @@
 import numpy as np
 
-from repro.core import (ThermalManager, ThermalRCModel, build_network,
-                        discretize_rc, make_2p5d_package)
+from repro.core import ThermalManager, make_2p5d_package
 
 
 def _mgr(t_max=85.0, t_target=80.0):
     pkg = make_2p5d_package(16)
-    rc = ThermalRCModel(build_network(pkg))
-    return ThermalManager(discretize_rc(rc, ts=0.01), t_max=t_max,
-                          t_target=t_target), rc
+    mgr = ThermalManager.from_package(pkg, ts=0.01, t_max=t_max,
+                                      t_target=t_target)
+    return mgr, mgr.dss.rc
 
 
 def test_throttle_holds_threshold():
@@ -38,9 +37,8 @@ def test_checkpoint_trigger():
     # a floor the throttle cannot rescue (min_throttle 0.5 at a 27C limit)
     # -> sustained violations -> pre-emptive checkpoint requested
     pkg = make_2p5d_package(16)
-    rc = ThermalRCModel(build_network(pkg))
-    dss = discretize_rc(rc, ts=0.01)
-    mgr = ThermalManager(dss, t_max=27.0, t_target=26.5, min_throttle=0.5)
+    mgr = ThermalManager.from_package(pkg, ts=0.01, t_max=27.0,
+                                      t_target=26.5, min_throttle=0.5)
     powers = np.full((400, 16), 3.0, np.float32)
     st, _, _ = mgr.run(powers)
     assert mgr.should_checkpoint(st, sustained=50)

@@ -1,0 +1,113 @@
+"""Vectorized O(E) network assembly vs the seed O(n^2) loop builder, and
+the unified multi-fidelity simulator API (fidelity registry + protocol)."""
+import numpy as np
+import pytest
+
+from repro.core import (ThermalSimulator, available_fidelities, build,
+                        discretize, make_2p5d_package, make_3d_package)
+from repro.core.assembly import adjacency_within, dedup_cuts, overlap_between
+from repro.core.assembly_ref import build_network_ref
+from repro.core.rc_model import build_network
+
+# Table 6 systems: 16/36/64-chiplet 2.5D and the 16x3 3D stack.
+TABLE6 = [make_2p5d_package(16), make_2p5d_package(36),
+          make_2p5d_package(64), make_3d_package(16, tiers=3)]
+
+
+@pytest.mark.parametrize("pkg", TABLE6, ids=lambda p: p.name)
+def test_vectorized_assembly_matches_reference(pkg):
+    grid = discretize(pkg)
+    net = build_network(pkg, grid=grid)
+    ref = build_network_ref(pkg, grid=grid)
+    assert net.rows.size == ref.rows.size  # same edge count
+    np.testing.assert_allclose(net.C, ref.C, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net.gconv, ref.gconv, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net.P, ref.P, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net.g_dense(), ref.g_dense(),
+                               rtol=0, atol=1e-12)
+
+
+def test_assembly_respects_cap_multipliers():
+    pkg = make_2p5d_package(16)
+    mults = {0: 1.3, 4: 0.7}
+    net = build_network(pkg, cap_multipliers=mults)
+    ref = build_network_ref(pkg, cap_multipliers=mults)
+    np.testing.assert_allclose(net.C, ref.C, rtol=0, atol=1e-12)
+
+
+def test_dedup_cuts_merges_epsilon_duplicates():
+    cuts = dedup_cuts(np.array([0.0, 1e-13, 1.0, 1.0 + 5e-13, 2.0]))
+    np.testing.assert_allclose(cuts, [0.0, 1.0, 2.0])
+
+
+def test_adjacency_within_simple_grid():
+    # 2x2 grid of unit squares: 4 touching pairs, none diagonal
+    x0 = np.array([0.0, 1.0, 0.0, 1.0])
+    x1 = x0 + 1.0
+    y0 = np.array([0.0, 0.0, 1.0, 1.0])
+    y1 = y0 + 1.0
+    (xi, xj), (yi, yj) = adjacency_within(x0, x1, y0, y1)
+    assert sorted(zip(xi.tolist(), xj.tolist())) == [(0, 1), (2, 3)]
+    assert sorted(zip(yi.tolist(), yj.tolist())) == [(0, 2), (1, 3)]
+
+
+def test_overlap_between_offset_grids():
+    # one big rect over a 2x2 grid: overlaps all four
+    pi, pj = overlap_between(
+        np.array([0.0]), np.array([2.0]), np.array([0.0]), np.array([2.0]),
+        np.array([0.0, 1.0, 0.0, 1.0]), np.array([1.0, 2.0, 1.0, 2.0]),
+        np.array([0.0, 0.0, 1.0, 1.0]), np.array([1.0, 1.0, 2.0, 2.0]))
+    assert sorted(zip(pi.tolist(), pj.tolist())) == \
+        [(0, 0), (0, 1), (0, 2), (0, 3)]
+
+
+# ---------------------------------------------------------------------------
+# Unified multi-fidelity API
+# ---------------------------------------------------------------------------
+def test_registry_lists_all_fidelities():
+    assert set(available_fidelities()) >= \
+        {"fvm", "rc", "dss", "hotspot", "3dice", "pact"}
+    with pytest.raises(KeyError, match="unknown fidelity"):
+        build(make_2p5d_package(4), "nope")
+
+
+def test_all_fidelities_share_protocol_and_tag_order():
+    pkg = make_2p5d_package(4)
+    tags = sources = None
+    for name in available_fidelities():
+        sim = build(pkg, name)
+        assert isinstance(sim, ThermalSimulator), name
+        assert sim.fidelity == name
+        if tags is None:
+            tags, sources = sim.tags, sim.source_names
+        assert sim.tags == tags, name  # shared observation-tag ordering
+        assert sim.source_names == sources, name  # shared q-vector order
+
+
+def test_fidelities_agree_on_steady_state():
+    """FVM / RC / DSS steady chiplet temps within paper-level tolerance."""
+    pkg = make_2p5d_package(4)
+    q = np.full(4, 3.0)
+    temps = {}
+    for name in ("fvm", "rc", "dss"):
+        sim = build(pkg, name)
+        temps[name] = np.asarray(sim.observe(sim.steady_state(q)))
+        assert temps[name].shape == (4,)
+    # DSS is an exact ZOH of the RC network -> near-identical fixed point
+    assert np.abs(temps["rc"] - temps["dss"]).max() < 1e-2
+    # RC vs FVM at the default (coarse) voxelization: paper-class agreement
+    assert np.abs(temps["rc"] - temps["fvm"]).max() < 5.0
+
+
+def test_batched_rollout_matches_single_across_fidelities():
+    pkg = make_2p5d_package(4)
+    dt = 0.01
+    q = np.full((40, 4), 2.0, np.float32)
+    for name in ("rc", "dss"):
+        sim = build(pkg, name)
+        single = np.asarray(sim.make_simulator(dt)(sim.zero_state(), q))
+        batch = np.asarray(sim.simulate_batch(
+            sim.zero_state(batch=3), np.tile(q[:, None, :], (1, 3, 1)), dt))
+        assert batch.shape == (40, 3, 4)
+        for b in range(3):
+            np.testing.assert_allclose(batch[:, b], single, atol=2e-2)

@@ -8,13 +8,21 @@ Measures, per system size and per registered fidelity:
     thermal RC (prefactored BE) vs DSS vs HotSpot-like (RK4) vs
     3D-ICE-like (per-step LU) vs PACT-like (TRAP);
   * DSS regeneration latency (paper: "a few milliseconds") and the
-    batched-DSE throughput unique to the TPU formulation.
+    batched-DSE throughput unique to the TPU formulation;
+  * the ``dse_sweep`` section: a B-candidate placement family evaluated
+    through ``build_family`` (one symbolic assembly + one device call,
+    template-preconditioned CG) vs the same candidates through a
+    per-package ``build()`` loop — both in float64 so the two paths can be
+    checked against each other to <=1e-6 degC.
 
 All models are obtained through the fidelity registry. Results land in a
 machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
 trajectory is tracked across PRs. Absolute times are this container's CPU;
 the reproduced claim is the ORDERING and the orders-of-magnitude
 separation (DESIGN.md §9).
+
+``--smoke`` runs the smallest system with a reduced trace and sweep — the
+CI benchmark step uses it to keep the artifact fresh on every push.
 """
 from __future__ import annotations
 
@@ -24,10 +32,11 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build, discretize, discretize_rc, make_2p5d_package, \
-    make_3d_package
+from repro.core import PackageFamily, build, build_family, discretize, \
+    discretize_rc, make_2p5d_package, make_3d_package
 from repro.core.assembly_ref import build_network_ref
 from repro.core.rc_model import build_network
 from repro.core.workloads import P2P5D, P3D, wl1
@@ -137,20 +146,89 @@ def run_system(system: str, n_steps: int, verbose=True) -> dict:
     return out
 
 
+def bench_dse_sweep(system: str = "2p5d_16", n_candidates: int = 128)\
+        -> dict:
+    """Batched placement sweep vs per-package build() loop (PR 2 tentpole).
+
+    Both paths run in float64: the batched path is one ``build_family``
+    (symbolic assembly + template Cholesky) plus ONE device call over the
+    (B, P) parameter batch; the loop is the pre-family workflow —
+    instantiate + discretize + assemble + solve per candidate. The two
+    must agree to <=1e-6 degC (recorded as ``match_max_err_degc``).
+    """
+    pkg, n_src, _ = _package(system)
+    with jax.experimental.enable_x64():
+        t0 = time.perf_counter()
+        family = PackageFamily(pkg, params=("grid_offsets",))
+        sim = build_family(family, "rc", dtype=jnp.float64)
+        t_build = time.perf_counter() - t0
+        params = family.sample_params(n_candidates, seed=0)
+        q = np.full((n_candidates, n_src), 3.0)
+
+        def batched():
+            th = sim.steady_state_batch(params, q)
+            return np.asarray(sim.observe_batch(th, params))
+
+        t0 = time.perf_counter()
+        temps = batched()                      # includes compile
+        t_cold = time.perf_counter() - t0
+        t_warm = _host_time(batched, reps=3)
+
+        t0 = time.perf_counter()
+        loop = np.empty_like(temps)
+        for b in range(n_candidates):
+            m = build(family.instantiate(params[b]), "rc",
+                      dtype=jnp.float64)
+            loop[b] = np.asarray(m.observe(m.steady_state(q[b])))
+        t_loop = time.perf_counter() - t0
+
+    out = {"system": system, "b": n_candidates,
+           "n_params": family.n_params, "nodes": family.grid.n,
+           "family_build_s": t_build,
+           "batched_cold_s": t_cold, "batched_s": t_warm,
+           "loop_s": t_loop,
+           "per_candidate_batched_s": t_warm / n_candidates,
+           "per_candidate_loop_s": t_loop / n_candidates,
+           "speedup": t_loop / max(t_warm, 1e-12),
+           "speedup_cold": t_loop / max(t_cold, 1e-12),
+           "match_max_err_degc": float(np.abs(temps - loop).max()),
+           "peak_best_degc": float(temps.max(axis=1).min()),
+           "peak_worst_degc": float(temps.max(axis=1).max())}
+    print(f"[dse_sweep] {system:8s} B={n_candidates:4d} "
+          f"batched={t_warm:.3f}s (cold {t_cold:.2f}s) loop={t_loop:.2f}s "
+          f"speedup={out['speedup']:.1f}x "
+          f"match={out['match_max_err_degc']:.2e}C", flush=True)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest system, short trace, small sweep (CI)")
+    ap.add_argument("--dse-b", type=int, default=None,
+                    help="candidate count for the dse_sweep section")
     ap.add_argument("--out", default="BENCH_exec_time.json")
     args = ap.parse_args(argv)
-    sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] if args.full \
-        else ["2p5d_16", "3d_16x3"]
-    n_steps = 4000 if args.full else 600
-    # assembly speedup is always tracked on the paper's largest systems
-    assembly = [bench_assembly(s) for s in
-                ["2p5d_16", "2p5d_64", "3d_16x3"]]
+    if args.smoke:
+        sim_systems, n_steps = ["2p5d_16"], 200
+        assembly_systems = ["2p5d_16"]
+        dse_b = args.dse_b or 32
+    else:
+        sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] \
+            if args.full else ["2p5d_16", "3d_16x3"]
+        n_steps = 4000 if args.full else 600
+        # assembly speedup is always tracked on the paper's largest systems
+        assembly_systems = ["2p5d_16", "2p5d_64", "3d_16x3"]
+        dse_b = args.dse_b or 128
+    assembly = [bench_assembly(s) for s in assembly_systems]
     systems = [run_system(s, n_steps) for s in sim_systems]
+    # last: the sweep runs (and traces) under x64
+    dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
     results = {"bench": "exec_time", "full": bool(args.full),
-               "assembly": assembly, "systems": systems}
+               "smoke": bool(args.smoke),
+               "assembly": assembly, "systems": systems,
+               "dse_sweep": dse}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
@@ -161,6 +239,8 @@ def main(argv=None):
     for a in assembly:
         print(f"assembly,{a['system']},speedup,"
               f"{a['assembly_speedup']:.1f}x")
+    for d in dse:
+        print(f"dse,{d['system']},B{d['b']},speedup,{d['speedup']:.1f}x")
     return results
 
 

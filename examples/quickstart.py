@@ -53,3 +53,19 @@ print(f"[DSS  ] {size['dss']:>12s}   peak {obs['dss'].max():6.1f} C   "
 print(f"\nrollout speedups: RC is {t_roll['fvm']/t_roll['rc']:.0f}x "
       f"faster than FVM; DSS is {t_roll['rc']/t_roll['dss']:.1f}x faster "
       f"than RC ({t_roll['fvm']/t_roll['dss']:.0f}x vs FVM)")
+
+# Level 2 of the API: a whole design space in one device call. A
+# PackageFamily shares the template's topology; placement/cooling
+# parameters ride a batch axis (see examples/thermal_dse.py for the full
+# sweep).
+from repro.core import PackageFamily, build_family  # noqa: E402
+
+family = PackageFamily(pkg, params=("grid_offsets",))
+fsim = build_family(family, "rc")
+params = family.sample_params(8, seed=0)
+qb = np.tile(q[200][None], (8, 1))
+temps = np.asarray(fsim.observe_batch(
+    fsim.steady_state_batch(params, qb), params))
+print(f"\n[family] {family.n_params}-parameter placement family, "
+      f"8 candidates in one call: peak spread "
+      f"{temps.max(axis=1).min():.2f}..{temps.max(axis=1).max():.2f} C")

@@ -1,17 +1,42 @@
 """Offline capacitance tuning (paper §4.3) — regenerates the default
-per-layer multipliers used by larger systems.
+per-layer multipliers committed in ``core/calibrate.py``
+(``DEFAULT_2P5D_MULTS`` / ``DEFAULT_3D_MULTS``).
+
+Tuning runs on SMALL representative systems (4-chiplet 2.5D, 4x2 3D) and
+transfers by layer-NAME prefix to larger systems of the same stack; tiered
+3D layer names (ubump_t0, ubump_t1, ...) are collapsed to their prefix by
+averaging so the multipliers apply to any tier count.
 
 Run:  PYTHONPATH=src python scripts/tune_caps.py
+then paste the printed dicts into core/calibrate.py.
 """
 import json
+import os
+import re
 
 from repro.core import make_2p5d_package, make_3d_package, tune_capacitance
+
+
+def collapse_tiers(by_name: dict) -> dict:
+    """{'ubump_t0': a, 'ubump_t1': b, ...} -> {'ubump': mean(a, b, ...)}"""
+    groups: dict = {}
+    for name, m in by_name.items():
+        groups.setdefault(re.sub(r"_t\d+$", "", name), []).append(m)
+    return {k: sum(v) / len(v) for k, v in groups.items()}
+
 
 out = {}
 for name, pkg in [("2p5d", make_2p5d_package(4)),
                   ("3d", make_3d_package(4, tiers=2))]:
     mults = tune_capacitance(pkg, maxiter=60, verbose=True)
-    out[name] = {pkg.layers[li].name: m for li, m in mults.items()}
+    out[name] = collapse_tiers(
+        {pkg.layers[li].name: m for li, m in mults.items()})
     print(name, out[name])
+
+os.makedirs("benchmarks/artifacts", exist_ok=True)
 with open("benchmarks/artifacts/cap_multipliers.json", "w") as f:
     json.dump(out, f, indent=1)
+print("\npaste into core/calibrate.py:")
+print("DEFAULT_2P5D_MULTS =", {k: round(v, 4) for k, v in
+                               out["2p5d"].items()})
+print("DEFAULT_3D_MULTS =", {k: round(v, 4) for k, v in out["3d"].items()})

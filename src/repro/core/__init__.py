@@ -5,37 +5,53 @@ Fidelity ladder (paper Fig. 2):
   ->  DSSModel (milliseconds)  ->  ThermalManager (runtime DTPM).
 
 All fidelities share the ``ThermalSimulator`` protocol and are built by
-string through the registry: ``build(pkg, fidelity="rc"|"fvm"|"dss"|...)``.
+string through the registry, at two levels:
+
+  ``build(pkg, fidelity="rc"|"fvm"|"dss"|...)``   one concrete package
+  ``build_family(PackageFamily(pkg, params=...))`` a whole design space,
+      evaluated as a device batch axis (``BatchedThermalSimulator``).
 """
+from .assembly import NumericAssembly, SymbolicNetwork, symbolic_network
 from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
-from .calibrate import multipliers_by_layer_name, tune_capacitance
-from .dss import DSSModel, discretize_rc, spectral_radius
+from .calibrate import (default_cap_multipliers, multipliers_by_layer_name,
+                        tune_capacitance)
+from .dss import (ContinuousSS, DSSFamilyModel, DSSModel, continuous_ss,
+                  discretize_css, discretize_rc, spectral_radius)
 from .dtpm import DTPMState, ThermalManager
-from .fidelity import (ThermalSimulator, available_fidelities, build,
-                       register_fidelity)
-from .fvm_ref import FVMReference, VoxelModel, voxelize
+from .family import FamilyParam, PackageFamily, TopologyError
+from .fidelity import (BatchedThermalSimulator, ThermalSimulator,
+                       available_family_fidelities, available_fidelities,
+                       build, build_family, register_family_fidelity,
+                       register_fidelity, simulate_batch_via_vmap)
+from .fvm_ref import (FVMFamilyModel, FVMReference, VoxelModel, voxelize)
 from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
                        discretize, make_2p5d_package, make_3d_package,
                        make_tpu_tray_package)
 from .materials import MATERIALS, HeatsinkSpec, Material
 from .power import V5E, HardwareSpec, StepCost, chip_power
-from .rc_model import (RCNetwork, ThermalRCModel, build_model, build_network,
-                       observation_matrix)
+from .rc_model import (RCFamilyModel, RCNetwork, ThermalRCModel,
+                       build_model, build_network, observation_matrix)
 from .workloads import ALL_WORKLOADS, P2P5D, P3D, PowerSpec, get_workload
 
 __all__ = [
+    "NumericAssembly", "SymbolicNetwork", "symbolic_network",
     "BASELINES", "hotspot_like", "pact_like", "threedice_like",
-    "multipliers_by_layer_name", "tune_capacitance",
-    "DSSModel", "discretize_rc", "spectral_radius",
+    "default_cap_multipliers", "multipliers_by_layer_name",
+    "tune_capacitance",
+    "ContinuousSS", "DSSFamilyModel", "DSSModel", "continuous_ss",
+    "discretize_css", "discretize_rc", "spectral_radius",
     "DTPMState", "ThermalManager",
-    "ThermalSimulator", "available_fidelities", "build",
-    "register_fidelity",
-    "FVMReference", "VoxelModel", "voxelize",
+    "FamilyParam", "PackageFamily", "TopologyError",
+    "BatchedThermalSimulator", "ThermalSimulator",
+    "available_family_fidelities", "available_fidelities",
+    "build", "build_family", "register_family_fidelity",
+    "register_fidelity", "simulate_batch_via_vmap",
+    "FVMFamilyModel", "FVMReference", "VoxelModel", "voxelize",
     "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",
     "MATERIALS", "HeatsinkSpec", "Material",
     "V5E", "HardwareSpec", "StepCost", "chip_power",
-    "RCNetwork", "ThermalRCModel", "build_model", "build_network",
-    "observation_matrix",
+    "RCFamilyModel", "RCNetwork", "ThermalRCModel", "build_model",
+    "build_network", "observation_matrix",
     "ALL_WORKLOADS", "P2P5D", "P3D", "PowerSpec", "get_workload",
 ]

@@ -20,15 +20,27 @@ own coordinates with exactly the seed's formulas, so the assembled network
 is bitwise-identical to the reference loop builder (see
 ``core/assembly_ref.py`` and ``tests/test_network_assembly.py``).
 
-Everything here is plain numpy on flat arrays with no geometry imports.
+Pair discovery happens on flat numpy arrays with no geometry imports.
 ``rc_model.build_network`` drives all of it; ``geometry.discretize`` keeps
 its own (also vectorized) background-cell rectangulation because its cell
 semantics must stay bitwise-identical to the seed's exact-float cut dedup,
 which differs from the eps-merged cuts used here.
+
+Batched design spaces (PR 2) split assembly one step further:
+
+  * the one-time host-side *symbolic* phase — :func:`symbolic_network`
+    freezes the COO edge pattern, convection masks and tag/source index
+    maps of a template grid into a :class:`SymbolicNetwork`;
+  * the traced *numeric* phase — :class:`NumericAssembly` evaluates
+    conductances/capacitances/source maps as a pure jax function of the
+    node-rect coordinates over that fixed pattern, so a
+    ``params -> (G_coo, C)`` map ``jax.vmap``s over a parameter batch
+    (see ``core/family.py`` and ``build_family`` in ``core/fidelity.py``).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -118,3 +130,243 @@ def overlap_between(ax0, ax1, ay0, ay1, bx0, bx1, by0, by1,
     ob = rasterize(bx0, bx1, by0, by1, xcuts, ycuts, eps)
     m = (oa >= 0) & (ob >= 0)
     return _unique_pairs(oa[m], ob[m], nb)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic phase: freeze a template grid's edge pattern and index maps
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SymbolicNetwork:
+    """Everything about an RC network that does NOT depend on continuous
+    package parameters: the COO edge pattern (lateral-x / lateral-y /
+    vertical pairs), convection boundary masks, material fields, and the
+    source/observation index maps. Conductance and capacitance VALUES are
+    evaluated from node coordinates by :class:`NumericAssembly`."""
+    n: int
+    n_layers: int
+    lx_i: np.ndarray        # lateral pairs sharing a vertical edge
+    lx_j: np.ndarray
+    ly_i: np.ndarray        # lateral pairs sharing a horizontal edge
+    ly_j: np.ndarray
+    v_i: np.ndarray         # vertical pairs (lower, upper layer)
+    v_j: np.ndarray
+    top: np.ndarray         # (N,) bool, top-boundary convection mask
+    bot: np.ndarray         # (N,) bool, bottom-boundary convection mask
+    kx: np.ndarray          # (N,) static material fields
+    ky: np.ndarray
+    kz: np.ndarray
+    cv: np.ndarray
+    layer: np.ndarray       # (N,) int
+    power_idx: np.ndarray   # (N,) int, -1 if not a source node
+    source_names: list
+    tag_idx: np.ndarray     # (N,) int into ``tags``, -1 if untagged
+    tags: list              # sorted observation tags
+
+    @property
+    def n_edges(self) -> int:
+        return self.lx_i.size + self.ly_i.size + self.v_i.size
+
+    @property
+    def rows(self) -> np.ndarray:
+        """Symmetric COO row indices (each undirected edge twice)."""
+        i = np.concatenate([self.lx_i, self.ly_i, self.v_i])
+        j = np.concatenate([self.lx_j, self.ly_j, self.v_j])
+        return np.concatenate([i, j]).astype(np.int32)
+
+    @property
+    def cols(self) -> np.ndarray:
+        i = np.concatenate([self.lx_i, self.ly_i, self.v_i])
+        j = np.concatenate([self.lx_j, self.ly_j, self.v_j])
+        return np.concatenate([j, i]).astype(np.int32)
+
+
+def symbolic_network(grid) -> SymbolicNetwork:
+    """One-time host phase: discover the fixed edge pattern of a node grid.
+
+    Same raster-sweep discovery as ``rc_model.build_network`` (which keeps
+    producing the seed-bitwise network for the single-package path); here
+    only the index pairs are retained so values can be re-evaluated from
+    any coordinates sharing the pattern.
+    """
+    layer_nodes = [np.nonzero(grid.layer == li)[0]
+                   for li in range(grid.n_layers)]
+    lx, ly = ([], []), ([], [])
+    for li in range(grid.n_layers):
+        idx = layer_nodes[li]
+        if idx.size == 0:
+            continue
+        (xi, xj), (yi, yj) = adjacency_within(
+            grid.x0[idx], grid.x1[idx], grid.y0[idx], grid.y1[idx], _EPS)
+        lx[0].append(idx[xi])
+        lx[1].append(idx[xj])
+        ly[0].append(idx[yi])
+        ly[1].append(idx[yj])
+    vv = ([], [])
+    for li in range(grid.n_layers - 1):
+        lower, upper = layer_nodes[li], layer_nodes[li + 1]
+        if lower.size == 0 or upper.size == 0:
+            continue
+        pi, pj = overlap_between(
+            grid.x0[lower], grid.x1[lower], grid.y0[lower], grid.y1[lower],
+            grid.x0[upper], grid.x1[upper], grid.y0[upper], grid.y1[upper],
+            _EPS)
+        vv[0].append(lower[pi])
+        vv[1].append(upper[pj])
+
+    cat = lambda parts: (np.concatenate(parts).astype(np.int32) if parts
+                         else np.zeros(0, np.int32))
+    tags = sorted({t for t in grid.tags if t})
+    tag_of = {t: k for k, t in enumerate(tags)}
+    return SymbolicNetwork(
+        n=grid.n, n_layers=grid.n_layers,
+        lx_i=cat(lx[0]), lx_j=cat(lx[1]),
+        ly_i=cat(ly[0]), ly_j=cat(ly[1]),
+        v_i=cat(vv[0]), v_j=cat(vv[1]),
+        top=grid.layer == grid.n_layers - 1,
+        bot=grid.layer == 0,
+        kx=grid.kx.copy(), ky=grid.ky.copy(), kz=grid.kz.copy(),
+        cv=grid.cv.copy(), layer=grid.layer.copy(),
+        power_idx=grid.power_idx.copy(),
+        source_names=list(grid.source_names),
+        tag_idx=np.array([tag_of.get(t, -1) for t in grid.tags], np.int32),
+        tags=tags)
+
+
+# ---------------------------------------------------------------------------
+# Numeric phase: pure-jax evaluation over the fixed pattern
+# ---------------------------------------------------------------------------
+class NumericAssembly:
+    """Device-resident copies of a :class:`SymbolicNetwork` plus pure
+    functions evaluating network values from node coordinates.
+
+    All methods are jax-traceable and batch transparently under
+    ``jax.vmap`` — this is the ``params -> (G_coo, C)`` numeric phase of
+    the symbolic/numeric assembly split. ``cap_multipliers`` (a
+    ``{layer_index: float}`` dict, static) are folded into the effective
+    volumetric heat capacity once at construction.
+    """
+
+    def __init__(self, sym: SymbolicNetwork, dtype=None,
+                 cap_multipliers: Optional[dict] = None):
+        import jax.numpy as jnp
+        self._jnp = jnp
+        self.sym = sym
+        self.dtype = dtype or jnp.float32
+        dev = lambda a: jnp.asarray(a, self.dtype)
+        self.lx_i, self.lx_j = jnp.asarray(sym.lx_i), jnp.asarray(sym.lx_j)
+        self.ly_i, self.ly_j = jnp.asarray(sym.ly_i), jnp.asarray(sym.ly_j)
+        self.v_i, self.v_j = jnp.asarray(sym.v_i), jnp.asarray(sym.v_j)
+        self.rows = jnp.asarray(sym.rows)
+        self.cols = jnp.asarray(sym.cols)
+        self.kx, self.ky, self.kz = dev(sym.kx), dev(sym.ky), dev(sym.kz)
+        cv_eff = sym.cv.copy()
+        if cap_multipliers:
+            for li, mult in cap_multipliers.items():
+                cv_eff = np.where(sym.layer == li, cv_eff * mult, cv_eff)
+        self.cv_eff = dev(cv_eff)
+        self.top = dev(sym.top.astype(np.float64))
+        self.bot = dev(sym.bot.astype(np.float64))
+        self.n_sources = len(sym.source_names)
+        self.n_obs = len(sym.tags)
+        # source / observation scatter indices (nodes with idx -1 get
+        # weight 0, parked on segment 0)
+        self.src_seg = jnp.asarray(np.maximum(sym.power_idx, 0))
+        self.src_on = dev(sym.power_idx >= 0)
+        self.obs_seg = jnp.asarray(np.maximum(sym.tag_idx, 0))
+        self.obs_on = dev(sym.tag_idx >= 0)
+
+    # -- geometric primitives ------------------------------------------------
+    def conductances(self, x0, x1, y0, y1, lz):
+        """(E_sym,) undirected edge conductances followed by their mirror —
+        i.e. values aligned with ``self.rows``/``self.cols``."""
+        jnp = self._jnp
+        i, j = self.lx_i, self.lx_j
+        ov = jnp.minimum(y1[i], y1[j]) - jnp.maximum(y0[i], y0[j])
+        area = ov * lz[i]  # same layer -> same thickness
+        r = 0.5 * (x1[i] - x0[i]) / (self.kx[i] * area) \
+            + 0.5 * (x1[j] - x0[j]) / (self.kx[j] * area)
+        g_lx = 1.0 / r
+        i, j = self.ly_i, self.ly_j
+        ov = jnp.minimum(x1[i], x1[j]) - jnp.maximum(x0[i], x0[j])
+        area = ov * lz[i]
+        r = 0.5 * (y1[i] - y0[i]) / (self.ky[i] * area) \
+            + 0.5 * (y1[j] - y0[j]) / (self.ky[j] * area)
+        g_ly = 1.0 / r
+        i, j = self.v_i, self.v_j
+        ox = jnp.minimum(x1[i], x1[j]) - jnp.maximum(x0[i], x0[j])
+        oy = jnp.minimum(y1[i], y1[j]) - jnp.maximum(y0[i], y0[j])
+        area = ox * oy
+        r = 0.5 * lz[i] / (self.kz[i] * area) \
+            + 0.5 * lz[j] / (self.kz[j] * area)
+        g_v = 1.0 / r
+        g = jnp.concatenate([g_lx, g_ly, g_v])
+        return jnp.concatenate([g, g])
+
+    def convection(self, area, htc_top, htc_bottom):
+        return htc_top * area * self.top + htc_bottom * area * self.bot
+
+    def capacitance(self, area, lz):
+        return self.cv_eff * area * lz
+
+    def source_matrix(self, area):
+        """(N, S) power distribution: per-source area fraction."""
+        jnp = self._jnp
+        w = area * self.src_on
+        totals = _segsum(jnp, w, self.src_seg, max(self.n_sources, 1))
+        p = w / totals[self.src_seg]
+        n = self.sym.n
+        return jnp.zeros((n, max(self.n_sources, 1)), p.dtype) \
+            .at[jnp.arange(n), self.src_seg].add(p)
+
+    def observation(self, area):
+        """(n_obs, N) observation operator: per-tag area-weighted mean."""
+        jnp = self._jnp
+        w = area * self.obs_on
+        totals = _segsum(jnp, w, self.obs_seg, max(self.n_obs, 1))
+        h = w / totals[self.obs_seg]
+        n = self.sym.n
+        return jnp.zeros((max(self.n_obs, 1), n), h.dtype) \
+            .at[self.obs_seg, jnp.arange(n)].add(h)
+
+    # -- assembled operators -------------------------------------------------
+    def network(self, coords, htc_top, htc_bottom):
+        """coords (5, N) as in ``family.COORD_FIELDS`` -> value dict.
+
+        Returns ``{"C", "gvals", "gconv", "P", "H", "area"}`` where
+        ``gvals`` is the symmetric COO value vector aligned with
+        ``rows``/``cols``. Pure jax; vmap over a coords batch for DSE.
+        """
+        x0, x1, y0, y1, lz = coords
+        area = (x1 - x0) * (y1 - y0)
+        return {
+            "C": self.capacitance(area, lz),
+            "gvals": self.conductances(x0, x1, y0, y1, lz),
+            "gconv": self.convection(area, htc_top, htc_bottom),
+            "P": self.source_matrix(area),
+            "H": self.observation(area),
+            "area": area,
+        }
+
+    def neg_g_diag(self, gvals, gconv):
+        """Diagonal of -G = (off-diagonal row sums) + convection."""
+        return _segsum(self._jnp, gvals, self.rows, self.sym.n) + gconv
+
+    def neg_g_matvec(self, gvals, gconv, x):
+        """(-G) @ x without materializing a dense matrix (COO edges)."""
+        off = _segsum(self._jnp, gvals * x[self.cols], self.rows,
+                      self.sym.n)
+        return self.neg_g_diag(gvals, gconv) * x - off
+
+    def dense_g(self, gvals, gconv):
+        """Paper Eq. 7 dense G (convection on the diagonal), traced."""
+        jnp = self._jnp
+        n = self.sym.n
+        g = jnp.zeros((n, n), gvals.dtype).at[self.rows, self.cols] \
+            .add(gvals)
+        return g - jnp.diag(jnp.sum(g, axis=1) + gconv)
+
+
+def _segsum(jnp, data, segment_ids, num_segments):
+    import jax
+    return jax.ops.segment_sum(data, segment_ids,
+                               num_segments=num_segments)

@@ -35,19 +35,26 @@ def reference_transient(pkg: Package, q_traj: np.ndarray, dt: float,
 def tune_capacitance(pkg: Package, dt: float = 0.01,
                      q_traj: Optional[np.ndarray] = None,
                      ref_obs: Optional[np.ndarray] = None,
-                     maxiter: int = 60, verbose: bool = False) -> dict:
+                     maxiter: int = 60, verbose: bool = False,
+                     ref_dx: float = 0.25e-3, reg: float = 0.05) -> dict:
     """Return {layer_index: multiplier} tuned so RC transients match FVM.
 
     Run on a small representative package; apply the result to larger
     systems with the same layer stack (paper: "re-tuning is rarely
-    required").
+    required"). The reference runs at a FINE voxelization (``ref_dx``) —
+    a coarse reference's own discretization bias would otherwise be
+    absorbed into the multipliers (capacitances cannot fix steady-state
+    error, so the optimizer distorts time constants instead and the
+    result does not transfer). ``reg`` adds a mild quadratic prior on the
+    log-multipliers for the same reason: it keeps the fix in the
+    transient response, where capacitance physically acts.
     """
     n_layers = len(pkg.layers)
     n_src = build_network(pkg).n_sources
     if q_traj is None:
         q_traj = wl1(n_src, dt=dt, t_stress=2.0, t_prbs=4.0, t_cool=3.0)
     if ref_obs is None:
-        ref_obs, _ = reference_transient(pkg, q_traj, dt)
+        ref_obs, _ = reference_transient(pkg, q_traj, dt, dx=ref_dx)
 
     evals = {"n": 0}
 
@@ -56,25 +63,40 @@ def tune_capacitance(pkg: Package, dt: float = 0.01,
         model = build(pkg, "rc", cap_multipliers=mults)
         sim = model.make_simulator(dt)
         obs = np.asarray(sim(model.zero_state(), q_traj))
-        err = float(np.mean(np.abs(obs - ref_obs)))
+        err = float(np.mean(np.abs(obs - ref_obs))
+                    + reg * np.mean(log_mults ** 2))
         evals["n"] += 1
-        if verbose:
-            print(f"  eval {evals['n']:3d}  mae={err:.4f}  "
+        if verbose:  # err is the REGULARIZED objective, not a plain MAE
+            print(f"  eval {evals['n']:3d}  obj={err:.4f}  "
                   f"mults={np.exp(log_mults).round(3)}")
         return err
 
-    res = optimize.minimize(mae_for, np.zeros(n_layers),
-                            method="Nelder-Mead",
+    # Nelder-Mead's default simplex around x0=0 steps by 2.5e-4 in
+    # log-multiplier space — too small to move the objective. Start from a
+    # +-0.25 log-step simplex so the search actually explores.
+    x0 = np.zeros(n_layers)
+    simplex = np.vstack([x0] + [x0 + 0.25 * e
+                                for e in np.eye(n_layers)])
+    res = optimize.minimize(mae_for, x0, method="Nelder-Mead",
                             options={"maxiter": maxiter, "xatol": 1e-3,
-                                     "fatol": 1e-4})
+                                     "fatol": 1e-4,
+                                     "initial_simplex": simplex})
     return {li: float(np.exp(m)) for li, m in enumerate(res.x)}
 
 
 # Multipliers tuned offline on the small 4-chiplet 2.5D and 4x2 3D
-# representative systems (regenerate with scripts/tune_caps.py). Keys are
-# layer names so they transfer across system sizes.
-DEFAULT_2P5D_MULTS: dict = {}
-DEFAULT_3D_MULTS: dict = {}
+# representative systems (regenerate with scripts/tune_caps.py; tiered 3D
+# layer names are collapsed to their prefix). Keys are layer-name prefixes
+# so they transfer across system sizes and tier counts; threaded through
+# the registry by ``build(pkg, "rc")`` via ``default_cap_multipliers``.
+DEFAULT_2P5D_MULTS: dict = {
+    "substrate": 0.8758, "c4": 1.0057, "interposer": 0.9581,
+    "ubump": 1.1323, "chiplets": 1.1414, "tim": 1.0945, "lid": 0.9450,
+}
+DEFAULT_3D_MULTS: dict = {
+    "substrate": 0.9032, "c4": 1.0408, "interposer": 0.9740,
+    "ubump": 1.1578, "chiplets": 1.0498, "tim": 1.1319, "lid": 0.6555,
+}
 
 
 def multipliers_by_layer_name(pkg: Package, by_name: dict) -> dict:
@@ -85,3 +107,14 @@ def multipliers_by_layer_name(pkg: Package, by_name: dict) -> dict:
             if layer.name.startswith(prefix):
                 out[li] = m
     return out
+
+
+def default_cap_multipliers(pkg: Package) -> dict:
+    """Tuned {layer_index: mult} for a package, or {} if its layer stack
+    has no tuned defaults (custom packages run untuned unless the caller
+    passes explicit ``cap_multipliers``)."""
+    if pkg.name.startswith("2p5d"):
+        return multipliers_by_layer_name(pkg, DEFAULT_2P5D_MULTS)
+    if pkg.name.startswith("3d"):
+        return multipliers_by_layer_name(pkg, DEFAULT_3D_MULTS)
+    return {}

@@ -11,10 +11,18 @@ We additionally fold the source-distribution matrix P into Bd
 (Bd_src = Bd P, shape N x S) so the runtime step consumes per-source powers
 directly — fewer MACs, no loss of fidelity.
 
-Regeneration from an RC model is a few dense ops and takes milliseconds
-(benchmarked in benchmarks/exec_time.py), matching the paper's claim that a
-DSS model is rebuilt on any config/sampling-period change rather than
-maintained.
+Regeneration from a config/sampling-period change is a few dense ops and
+takes milliseconds (benchmarked in benchmarks/exec_time.py), matching the
+paper's claim that a DSS model is rebuilt rather than maintained. A model
+retains only the minimal continuous-time arrays needed for that —
+:class:`ContinuousSS` ``(A, B_src, H)`` as HOST float64 — not the parent
+``ThermalRCModel`` (which would pin a second dense N x N G on device for
+the lifetime of a serving process).
+
+Batched design spaces: :class:`DSSFamilyModel` (``build_family(fam,
+"dss")``) evaluates Ad/Bd per candidate with a vmapped ``expm`` over the
+family's traced numeric assembly, so a parameter batch rides one device
+batch axis end to end.
 """
 from __future__ import annotations
 
@@ -26,9 +34,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.dss_step.ops import dss_rollout, dss_step
-from .fidelity import register_fidelity
+from .fidelity import (evict_stale_jits, register_family_fidelity,
+                       register_fidelity)
 from .geometry import Package
-from .rc_model import ThermalRCModel, build_model
+from .rc_model import (RCFamilyModel, ThermalRCModel, build_model,
+                       observation_matrix)
+
+
+@dataclasses.dataclass
+class ContinuousSS:
+    """Minimal continuous-time state space for DSS regeneration.
+
+    Host float64 numpy (never device-resident): regeneration is a host
+    ``expm`` anyway, and keeping these off-device frees the second dense
+    N x N matrix a retained parent RC model used to pin in long-lived
+    serving processes.
+    """
+    a: np.ndarray            # (N, N)  C^-1 G
+    b_src: np.ndarray        # (N, S)  C^-1 P (source distribution folded)
+    h: np.ndarray            # (n_obs, N) observation operator
+    t_ambient: float
+    tags: list
+    source_names: list
 
 
 @dataclasses.dataclass
@@ -42,7 +69,7 @@ class DSSModel:
     t_ambient: float
     tags: list = dataclasses.field(default_factory=list)
     source_names: list = dataclasses.field(default_factory=list)
-    rc: Optional[ThermalRCModel] = None  # parent model, for regeneration
+    css: Optional[ContinuousSS] = None  # minimal regeneration state (host)
     _regen_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     fidelity = "dss"
@@ -76,8 +103,10 @@ class DSSModel:
 
         The CPU implementation in the paper evaluates one trace at a time;
         batching candidate configurations through one GEMM is the TPU-native
-        speedup (DESIGN.md §2). ``dt`` other than the built ``ts``
-        regenerates from the parent RC model (milliseconds).
+        speedup (DESIGN.md §2) — the DSS step needs no vmap wrapper (unlike
+        the other fidelities' shared ``simulate_batch_via_vmap`` helper).
+        ``dt`` other than the built ``ts`` regenerates from the retained
+        continuous-time arrays (milliseconds).
         """
         if dt is not None and abs(dt - self.ts) > 1e-12:
             return self._regenerated(dt).simulate_batch(
@@ -88,16 +117,16 @@ class DSSModel:
 
     # -- common ThermalSimulator protocol -----------------------------------
     def _regenerated(self, ts: float) -> "DSSModel":
-        if self.rc is None:
+        if self.css is None:
             raise ValueError(
-                f"DSS model built for ts={self.ts} has no parent RC model "
-                f"to regenerate at ts={ts}")
+                f"DSS model built for ts={self.ts} retains no "
+                f"continuous-time state to regenerate at ts={ts}")
         key = round(ts, 12)  # match the 1e-12 dt tolerance of the callers
         if key not in self._regen_cache:  # expm is O(N^3); pay it once
             if len(self._regen_cache) >= 8:  # bound long-lived processes
                 self._regen_cache.pop(next(iter(self._regen_cache)))
-            self._regen_cache[key] = discretize_rc(self.rc, ts=ts,
-                                                   dtype=self.ad.dtype)
+            self._regen_cache[key] = discretize_css(self.css, ts=ts,
+                                                    dtype=self.ad.dtype)
         return self._regen_cache[key]
 
     def steady_state(self, q_src) -> jnp.ndarray:
@@ -129,27 +158,43 @@ class DSSModel:
         return jnp.zeros(shape, self.ad.dtype)
 
 
-def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
-                  dtype=jnp.float32) -> DSSModel:
-    """Build the DSS model from a thermal RC model (paper Eq. 13).
+def continuous_ss(rc: ThermalRCModel) -> ContinuousSS:
+    """Extract the minimal (A, B, H) regeneration state from an RC model
+    (host float64, independent of the RC model's device arrays)."""
+    C = np.asarray(rc.net.C, np.float64)
+    G = np.asarray(rc.net.g_dense(), np.float64)
+    P = np.asarray(rc.net.P, np.float64)
+    return ContinuousSS(a=G / C[:, None], b_src=P / C[:, None],
+                        h=observation_matrix(rc.net, rc.tags),
+                        t_ambient=rc.t_ambient, tags=list(rc.tags),
+                        source_names=list(rc.source_names))
+
+
+def discretize_css(css: ContinuousSS, ts: float = 0.01,
+                   dtype=jnp.float32) -> DSSModel:
+    """ZOH-discretize a continuous-time state space (paper Eq. 13).
 
     Computed in float64 on host (expm of a stiff matrix), stored in the
     requested runtime dtype.
     """
-    C = np.asarray(rc.C, np.float64)
-    G = np.asarray(rc.G, np.float64)
-    P = np.asarray(rc.P, np.float64)
-    A = G / C[:, None]                      # C^-1 G (diagonal C)
-    ad = _expm(A * ts)
-    # Bd = A^-1 (Ad - I) C^-1 ; then fold P.
-    x = np.linalg.solve(A, ad - np.eye(A.shape[0]))
-    bd = (x / C[None, :]) @ P
-    ad_j = jnp.asarray(ad, dtype)
-    bd_j = jnp.asarray(bd, dtype)
-    return DSSModel(ad=ad_j, bd=bd_j, ad_t=jnp.asarray(ad.T, dtype),
-                    bd_t=jnp.asarray(bd.T, dtype), H=rc.H, ts=ts,
-                    t_ambient=rc.t_ambient, tags=list(rc.tags),
-                    source_names=list(rc.source_names), rc=rc)
+    ad = _expm(css.a * ts)
+    bd = np.linalg.solve(css.a, ad - np.eye(css.a.shape[0])) @ css.b_src
+    return DSSModel(ad=jnp.asarray(ad, dtype), bd=jnp.asarray(bd, dtype),
+                    ad_t=jnp.asarray(ad.T, dtype),
+                    bd_t=jnp.asarray(bd.T, dtype),
+                    H=jnp.asarray(css.h, dtype), ts=ts,
+                    t_ambient=css.t_ambient, tags=list(css.tags),
+                    source_names=list(css.source_names), css=css)
+
+
+def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
+                  dtype=jnp.float32) -> DSSModel:
+    """Build the DSS model from a thermal RC model (paper Eq. 13).
+
+    Only the minimal continuous-time (A, B, H) arrays are retained for
+    later regeneration — NOT ``rc`` itself (see module docstring).
+    """
+    return discretize_css(continuous_ss(rc), ts=ts, dtype=dtype)
 
 
 @register_fidelity("dss")
@@ -176,3 +221,90 @@ def spectral_radius(dss: DSSModel) -> float:
     property-tested in tests/test_dss.py)."""
     return float(np.max(np.abs(np.linalg.eigvals(np.asarray(dss.ad,
                                                             np.float64)))))
+
+
+# ---------------------------------------------------------------------------
+# Batched design-space model
+# ---------------------------------------------------------------------------
+class DSSFamilyModel:
+    """DSS model over a ``PackageFamily``: per-candidate exact-ZOH
+    discretization as a traced, vmapped function of the parameter vector.
+
+    Steady state delegates to the RC family's template-preconditioned CG —
+    the ZOH fixed point ``(I - Ad)^-1 Bd q`` equals the continuous fixed
+    point ``(-G)^-1 P q`` exactly, so no per-candidate ``expm`` is paid
+    for steady sweeps. Transients (``simulate_family``) evaluate
+    ``Ad = expm(A dt)`` per candidate under vmap, then roll the batch with
+    one GEMM per step (the kernel formulation of ``kernels/dss_step``,
+    generalized to per-candidate Ad/Bd).
+    """
+
+    fidelity = "dss"
+
+    def __init__(self, family, ts: float = 0.01,
+                 cap_multipliers: Optional[dict] = None,
+                 dtype=jnp.float32, **rc_opts):
+        self.rcf = RCFamilyModel(family, cap_multipliers=cap_multipliers,
+                                 dtype=dtype, **rc_opts)
+        self.family = family
+        self.ts = ts
+        self.dtype = dtype
+        self.tags = self.rcf.tags
+        self.source_names = self.rcf.source_names
+        self.param_names = self.rcf.param_names
+        self._jits: dict = {}
+
+    @property
+    def n(self) -> int:
+        return self.rcf.n
+
+    def steady_state_batch(self, params, q_src) -> jnp.ndarray:
+        return self.rcf.steady_state_batch(params, q_src)
+
+    def observe_batch(self, theta, params) -> jnp.ndarray:
+        return self.rcf.observe_batch(theta, params)
+
+    def simulate_family(self, params, q_traj,
+                        dt: Optional[float] = None) -> jnp.ndarray:
+        """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs).
+
+        ``dt`` defaults to the built ``ts``; any other value simply traces
+        a new discretization (regeneration is part of the same jit)."""
+        dt = self.ts if dt is None else float(dt)
+        key = ("simulate", dt)
+        if key not in self._jits:
+            evict_stale_jits(self._jits)
+            rcf = self.rcf
+
+            def discretize_one(p):
+                v = rcf._network(p)
+                c = v["C"]
+                g = rcf.num.dense_g(v["gvals"], v["gconv"])
+                a = g / c[:, None]
+                ad = jax.scipy.linalg.expm(a * dt)
+                eye = jnp.eye(a.shape[0], dtype=a.dtype)
+                bd = jnp.linalg.solve(a, ad - eye) @ (v["P"] / c[:, None])
+                return (ad, bd, v["H"], v["t_ambient"], v["power_scale"])
+
+            def _simulate(params, q_traj):
+                ad, bd, h, t_amb, scale = jax.vmap(discretize_one)(params)
+
+                def body(th, qt):  # th (B,N), qt (B,S)
+                    q = qt.astype(th.dtype) * scale[:, None]
+                    th = jnp.einsum("bnm,bm->bn", ad, th) \
+                        + jnp.einsum("bns,bs->bn", bd, q)
+                    return th, jnp.einsum("bon,bn->bo", h, th)
+
+                th0 = jnp.zeros((params.shape[0], self.n), self.dtype)
+                _, obs = jax.lax.scan(body, th0, q_traj)
+                return obs + t_amb[None, :, None]
+
+            self._jits[key] = jax.jit(_simulate)
+        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+
+
+@register_family_fidelity("dss")
+def build_dss_family(family, ts: float = 0.01, cap_multipliers=None,
+                     dtype=jnp.float32, **opts) -> DSSFamilyModel:
+    return DSSFamilyModel(family, ts=ts, cap_multipliers=cap_multipliers,
+                          dtype=dtype, **opts)

@@ -1,0 +1,521 @@
+"""Package families: one node-network topology, a continuum of packages.
+
+MFIT's headline use case is design-space exploration — sweeping chiplet
+placements and cooling options at the right fidelity — but ``build(pkg,
+fidelity)`` takes one concrete :class:`~repro.core.geometry.Package`, so a
+sweep pays host-side assembly, jit and dispatch once per candidate. A
+:class:`PackageFamily` is the fix: a template ``Package`` plus named
+CONTINUOUS parameters whose variation does not change the node-network
+topology (cut-grid structure and COO edge pattern are fixed by the
+template). Assembly then splits into
+
+  * a one-time host-side *symbolic* phase — template discretization, edge
+    COO pattern, tag/source index maps (``core/assembly.py``), plus the
+    affine map from parameters to node-rect coordinates built here; and
+  * a traced *numeric* phase ``params -> (G_coo, C)`` that is a pure jax
+    function over the fixed edge pattern and therefore ``jax.vmap``s over
+    a ``(B, P)`` parameter batch (see ``build_family`` in
+    ``core/fidelity.py``).
+
+Supported parameter specs (strings passed to ``PackageFamily(...,
+params=...)``; each expands to one or more scalar parameters, in order):
+
+  ``"grid_offsets"``        one x-offset per chiplet-site column and one
+                            y-offset per row (placement sweep; all sites in
+                            a column/row co-move, which is what keeps the
+                            shared cut lines shared — see TopologyError)
+  ``"offset:<tag>"``        independent (dx, dy) for the single site whose
+                            blocks carry ``<tag>`` (valid only when the
+                            site shares no cut lines with other sites)
+  ``"offsets"``             independent (dx, dy) for EVERY site — raises
+                            :class:`TopologyError` on grid-aligned
+                            templates where sites share cut lines
+  ``"thickness:<layer>"``   absolute thickness of the named layer
+  ``"htc_top"``             top-boundary heat-transfer coefficient (Eq. 3)
+  ``"t_ambient"``           ambient temperature (degC)
+  ``"power_scale"``         scalar multiplier applied to the power vector q
+
+Every coordinate of the discretized node network is an AFFINE function of
+the parameter vector; the Jacobian is recovered exactly by finite-probe
+evaluations of the same host path used per-candidate
+(``instantiate(params)`` -> ``discretize``), so the family's numeric phase
+and a per-package ``build()`` loop agree to solver tolerance. A probe that
+changes the topology (node count, cut order, edge pattern) raises
+:class:`TopologyError` at construction with the offending parameter named.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .assembly import SymbolicNetwork, symbolic_network
+from .geometry import NodeGrid, Package, discretize
+
+_EPS = 1e-9          # geometric coincidence tolerance (meters)
+_PROBE_H = 1e-6      # finite-probe step for the affine-coordinate Jacobian
+COORD_FIELDS = ("x0", "x1", "y0", "y1", "lz")
+
+# knobs that change the discretization itself — never family parameters
+_DISCRETE_KNOBS = ("nx", "ny", "n_chiplets", "n_side", "blocks", "layers",
+                   "tiers", "grid", "dx_target", "dz_target", "max_slabs")
+
+
+class TopologyError(ValueError):
+    """A parameter (or parameter value) changes the node-network topology.
+
+    Families require a fixed cut-grid structure and COO edge pattern; a
+    parameter that adds/removes nodes or edges cannot ride the batch axis
+    and must be swept as separate ``build()`` calls instead.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyParam:
+    """One scalar parameter of a family (one slot of the params vector)."""
+    name: str        # e.g. "grid_dx:1", "offset_y:chiplet_3", "htc_top"
+    kind: str        # grid_dx|grid_dy|offset_x|offset_y|thickness|scalar
+    target: str      # column/row index, site tag, or layer name ("" scalar)
+    base: float      # template value (params == base reproduces template)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Site:
+    """A unique chiplet footprint; all blocks sharing it co-move."""
+    tag: str                       # lexicographically first tag at footprint
+    x0: float
+    y0: float
+    x1: float
+    y1: float
+    col: int                       # index among distinct x-centers
+    row: int                       # index among distinct y-centers
+
+
+def _footprint_key(x0, y0, x1, y1) -> tuple:
+    return (round(x0, 12), round(y0, 12), round(x1, 12), round(y1, 12))
+
+
+class PackageFamily:
+    """A template ``Package`` plus named continuous parameters.
+
+    See the module docstring for the parameter-spec grammar. The family is
+    immutable after construction; it exposes
+
+      * ``param_names`` / ``base_params()`` — the flat parameter vector,
+      * ``instantiate(params)`` — the concrete per-candidate ``Package``
+        (the reference path batched simulators are validated against),
+      * ``grid`` / ``sym`` — the template node grid and its fixed symbolic
+        network (edge COO pattern + index maps),
+      * ``coord_base`` / ``coord_jac`` — the affine map params -> node
+        rect coordinates (rows ordered as ``COORD_FIELDS``),
+      * ``validate_params(params)`` — host-side check that a parameter
+        batch stays inside the family's fixed-topology region,
+      * ``param_bounds()`` — per-parameter [lo, hi] sampling box
+        (topology-derived slack for offsets, conservative elsewhere).
+    """
+
+    def __init__(self, template: Package,
+                 params: Sequence[str] = ("grid_offsets",)):
+        self.template = template
+        self.sites = self._find_sites(template)
+        self.params: List[FamilyParam] = self._expand_specs(params)
+        self.param_names = [p.name for p in self.params]
+        self.n_params = len(self.params)
+        # scalar slots (index into the params vector, or -1 => template)
+        self._idx_htc = self._scalar_idx("htc_top")
+        self._idx_tamb = self._scalar_idx("t_ambient")
+        self._idx_pscale = self._scalar_idx("power_scale")
+
+        self.grid: NodeGrid = discretize(template)
+        self.sym: SymbolicNetwork = symbolic_network(self.grid)
+        self.coord_base, self.coord_jac = self._probe_affine_map()
+
+    # ------------------------------------------------------------------
+    # construction: sites, specs, probes
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _find_sites(pkg: Package) -> List[_Site]:
+        anchors = {}
+        for layer in pkg.layers:
+            for b in layer.blocks:
+                if not (b.tag or b.power_name):
+                    continue
+                key = _footprint_key(b.x0, b.y0, b.x1, b.y1)
+                tag = b.tag or b.power_name
+                if key not in anchors or tag < anchors[key][0]:
+                    anchors[key] = (tag, b.x0, b.y0, b.x1, b.y1)
+        entries = sorted(anchors.values())
+        xcs = sorted({round(0.5 * (e[1] + e[3]), 12) for e in entries})
+        ycs = sorted({round(0.5 * (e[2] + e[4]), 12) for e in entries})
+        sites = []
+        for tag, x0, y0, x1, y1 in entries:
+            sites.append(_Site(
+                tag=tag, x0=x0, y0=y0, x1=x1, y1=y1,
+                col=xcs.index(round(0.5 * (x0 + x1), 12)),
+                row=ycs.index(round(0.5 * (y0 + y1), 12))))
+        return sites
+
+    @property
+    def n_cols(self) -> int:
+        return 1 + max((s.col for s in self.sites), default=-1)
+
+    @property
+    def n_rows(self) -> int:
+        return 1 + max((s.row for s in self.sites), default=-1)
+
+    def _expand_specs(self, specs: Sequence[str]) -> List[FamilyParam]:
+        layer_names = [l.name for l in self.template.layers]
+        site_tags = [s.tag for s in self.sites]
+        out: List[FamilyParam] = []
+        placement: set = set()  # sites already owned by a placement spec
+
+        def claim(tags, spec):
+            clash = placement.intersection(tags)
+            if clash:
+                raise ValueError(
+                    f"spec {spec!r} overlaps an earlier placement spec for "
+                    f"site(s) {sorted(clash)}; each site may have one "
+                    f"placement parameterization")
+            placement.update(tags)
+
+        for spec in specs:
+            kind, _, target = spec.partition(":")
+            if kind in _DISCRETE_KNOBS:
+                raise TopologyError(
+                    f"parameter spec {spec!r} changes the node-network "
+                    f"topology (grid granularity / block count); families "
+                    f"hold topology fixed — sweep it with per-package "
+                    f"build() calls instead")
+            if kind == "grid_offsets":
+                claim(site_tags, spec)
+                if not self.sites:
+                    raise ValueError("template has no chiplet sites to "
+                                     "place (no tagged/powered blocks)")
+                for k in range(self.n_cols):
+                    out.append(FamilyParam(f"grid_dx:{k}", "grid_dx",
+                                           str(k), 0.0))
+                for k in range(self.n_rows):
+                    out.append(FamilyParam(f"grid_dy:{k}", "grid_dy",
+                                           str(k), 0.0))
+            elif kind == "offsets":
+                claim(site_tags, spec)
+                for s in self.sites:
+                    out.append(FamilyParam(f"offset_x:{s.tag}", "offset_x",
+                                           s.tag, 0.0))
+                    out.append(FamilyParam(f"offset_y:{s.tag}", "offset_y",
+                                           s.tag, 0.0))
+            elif kind == "offset":
+                if target not in site_tags:
+                    raise ValueError(f"unknown site {target!r}; sites: "
+                                     f"{', '.join(site_tags)}")
+                claim([target], spec)
+                out.append(FamilyParam(f"offset_x:{target}", "offset_x",
+                                       target, 0.0))
+                out.append(FamilyParam(f"offset_y:{target}", "offset_y",
+                                       target, 0.0))
+            elif kind == "thickness":
+                if target not in layer_names:
+                    raise ValueError(f"unknown layer {target!r}; layers: "
+                                     f"{', '.join(layer_names)}")
+                base = self.template.layers[layer_names.index(target)] \
+                    .thickness
+                out.append(FamilyParam(spec, "thickness", target, base))
+            elif kind == "htc_top" and not target:
+                out.append(FamilyParam("htc_top", "scalar", "",
+                                       self.template.htc_top))
+            elif kind == "t_ambient" and not target:
+                out.append(FamilyParam("t_ambient", "scalar", "",
+                                       self.template.t_ambient))
+            elif kind == "power_scale" and not target:
+                out.append(FamilyParam("power_scale", "scalar", "", 1.0))
+            else:
+                raise ValueError(
+                    f"unknown parameter spec {spec!r}; supported: "
+                    f"grid_offsets, offsets, offset:<tag>, "
+                    f"thickness:<layer>, htc_top, t_ambient, power_scale")
+        if len({p.name for p in out}) != len(out):
+            raise ValueError("duplicate parameter specs")
+        return out
+
+    def _scalar_idx(self, name: str) -> int:
+        for i, p in enumerate(self.params):
+            if p.name == name:
+                return i
+        return -1
+
+    def base_params(self) -> np.ndarray:
+        """Parameter vector reproducing the template exactly."""
+        return np.array([p.base for p in self.params], np.float64)
+
+    # ------------------------------------------------------------------
+    # the per-candidate reference path
+    # ------------------------------------------------------------------
+    def _site_shift(self, params: np.ndarray) -> dict:
+        """footprint key -> (dx, dy) for the given parameter vector."""
+        shift = {}
+        for s in self.sites:
+            dx = dy = 0.0
+            for i, p in enumerate(self.params):
+                if p.kind == "grid_dx" and int(p.target) == s.col:
+                    dx += params[i]
+                elif p.kind == "grid_dy" and int(p.target) == s.row:
+                    dy += params[i]
+                elif p.kind == "offset_x" and p.target == s.tag:
+                    dx += params[i]
+                elif p.kind == "offset_y" and p.target == s.tag:
+                    dy += params[i]
+            shift[_footprint_key(s.x0, s.y0, s.x1, s.y1)] = (dx, dy)
+        return shift
+
+    def instantiate(self, params) -> Package:
+        """Concrete ``Package`` for one parameter vector (host-side).
+
+        This is the reference path: ``build(family.instantiate(p), fid)``
+        must agree with the batched family simulators to solver tolerance.
+        ``power_scale`` (if parameterized) is NOT representable in a
+        ``Package`` — it scales the power vector ``q``; callers of the
+        per-candidate path must scale q by ``power_scale(params)``.
+        """
+        params = np.asarray(params, np.float64)
+        if params.shape != (self.n_params,):
+            raise ValueError(f"params must have shape ({self.n_params},), "
+                             f"got {params.shape}")
+        shift = self._site_shift(params)
+        thick = {p.target: params[i] for i, p in enumerate(self.params)
+                 if p.kind == "thickness"}
+        layers = []
+        for layer in self.template.layers:
+            blocks = []
+            for b in layer.blocks:
+                d = shift.get(_footprint_key(b.x0, b.y0, b.x1, b.y1))
+                if d is not None and (d[0] or d[1]):
+                    b = dataclasses.replace(b, x0=b.x0 + d[0],
+                                            x1=b.x1 + d[0],
+                                            y0=b.y0 + d[1],
+                                            y1=b.y1 + d[1])
+                blocks.append(b)
+            layers.append(dataclasses.replace(
+                layer, thickness=float(thick.get(layer.name,
+                                                 layer.thickness)),
+                blocks=tuple(blocks)))
+        return dataclasses.replace(
+            self.template, layers=tuple(layers),
+            htc_top=float(self.htc_top(params)),
+            t_ambient=float(self.t_ambient(params)))
+
+    def htc_top(self, params) -> float:
+        return float(np.asarray(params)[self._idx_htc]) \
+            if self._idx_htc >= 0 else self.template.htc_top
+
+    def t_ambient(self, params) -> float:
+        return float(np.asarray(params)[self._idx_tamb]) \
+            if self._idx_tamb >= 0 else self.template.t_ambient
+
+    def power_scale(self, params) -> float:
+        return float(np.asarray(params)[self._idx_pscale]) \
+            if self._idx_pscale >= 0 else 1.0
+
+    # index/constant views for traced (jax) consumers
+    @property
+    def scalar_slots(self) -> dict:
+        """{name: (param_index or -1, template value)} for traced eval."""
+        return {"htc_top": (self._idx_htc, self.template.htc_top),
+                "t_ambient": (self._idx_tamb, self.template.t_ambient),
+                "power_scale": (self._idx_pscale, 1.0)}
+
+    # ------------------------------------------------------------------
+    # symbolic phase: exact affine coordinate map via finite probes
+    # ------------------------------------------------------------------
+    def _coords_of(self, grid: NodeGrid) -> np.ndarray:
+        return np.stack([getattr(grid, f) for f in COORD_FIELDS])
+
+    def _check_topology(self, probed: NodeGrid, sym: SymbolicNetwork,
+                        param: FamilyParam) -> None:
+        g0 = self.grid
+        same = (probed.n == g0.n
+                and np.array_equal(probed.layer, g0.layer)
+                and np.array_equal(probed.power_idx, g0.power_idx)
+                and probed.tags == g0.tags
+                and probed.source_names == g0.source_names)
+        if same:
+            s0 = self.sym
+            same = all(np.array_equal(getattr(sym, f), getattr(s0, f))
+                       for f in ("lx_i", "lx_j", "ly_i", "ly_j",
+                                 "v_i", "v_j"))
+        if not same:
+            raise TopologyError(
+                f"parameter {param.name!r} changes the node-network "
+                f"topology ({g0.n} -> {probed.n} nodes, or a different "
+                f"cut-grid/edge pattern): varying it cannot share the "
+                f"template's fixed COO structure. Chiplet sites that share "
+                f"cut lines (grid-aligned placements) must co-move — use "
+                f"'grid_offsets' instead of independent 'offsets', or "
+                f"sweep this knob with per-package build() calls.")
+
+    def _probe_affine_map(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Recover coords(params) = base + J @ params by finite probes.
+
+        Coordinates are affine in every supported parameter, so one probe
+        per parameter recovers J exactly (entries are rounded at 1e-9 to
+        strip float noise from the difference quotient); each probe also
+        re-checks that the discretization topology is unchanged.
+        """
+        base = self.base_params()
+        coords0 = self._coords_of(self.grid)
+        jac = np.zeros((len(COORD_FIELDS), self.grid.n, self.n_params))
+        for k, param in enumerate(self.params):
+            if param.kind == "scalar":
+                continue  # no coordinate dependence
+            p = base.copy()
+            p[k] += _PROBE_H
+            probed = discretize(self.instantiate(p))
+            self._check_topology(probed, symbolic_network(probed), param)
+            jac[:, :, k] = np.round(
+                (self._coords_of(probed) - coords0) / _PROBE_H, 9)
+        return coords0, jac
+
+    def coords(self, params: np.ndarray) -> np.ndarray:
+        """(5, N) node coordinates (host numpy; traced consumers apply the
+        same affine map to device copies of ``coord_base``/``coord_jac``)."""
+        return self.coord_base + self.coord_jac @ np.asarray(params,
+                                                             np.float64)
+
+    def block_affine(self) -> list:
+        """Per-block affine placement: ``(layer_idx, block, wx, wy)`` with
+        corners at params p equal to ``(x0 + wx @ p, ...)`` — offsets have
+        base 0, so the weight vectors apply to p directly. Used by traced
+        consumers that voxelize (FVM family) rather than consume the node
+        grid."""
+        site_of = {_footprint_key(s.x0, s.y0, s.x1, s.y1): s
+                   for s in self.sites}
+        out = []
+        for li, layer in enumerate(self.template.layers):
+            for b in layer.blocks:
+                wx = np.zeros(self.n_params)
+                wy = np.zeros(self.n_params)
+                s = site_of.get(_footprint_key(b.x0, b.y0, b.x1, b.y1))
+                if s is not None:
+                    for i, p in enumerate(self.params):
+                        if (p.kind == "grid_dx"
+                                and int(p.target) == s.col) or \
+                                (p.kind == "offset_x"
+                                 and p.target == s.tag):
+                            wx[i] = 1.0
+                        elif (p.kind == "grid_dy"
+                              and int(p.target) == s.row) or \
+                                (p.kind == "offset_y"
+                                 and p.target == s.tag):
+                            wy[i] = 1.0
+                out.append((li, b, wx, wy))
+        return out
+
+    def thickness_affine(self) -> list:
+        """Per-layer ``(const, w)`` with thickness(p) = const + w @ p."""
+        out = []
+        for layer in self.template.layers:
+            w = np.zeros(self.n_params)
+            const = layer.thickness
+            for i, p in enumerate(self.params):
+                if p.kind == "thickness" and p.target == layer.name:
+                    const, w[i] = 0.0, 1.0
+            out.append((const, w))
+        return out
+
+    # ------------------------------------------------------------------
+    # validity region
+    # ------------------------------------------------------------------
+    def validate_params(self, params, eps: float = _EPS) -> None:
+        """Raise :class:`TopologyError` if any candidate leaves the
+        family's fixed-topology region (degenerate cells, vanished edge
+        overlaps, non-positive thicknesses/HTCs)."""
+        p = np.atleast_2d(np.asarray(params, np.float64))
+        if p.shape[1] != self.n_params:
+            raise ValueError(f"params must have {self.n_params} columns, "
+                             f"got shape {p.shape}")
+        c = self.coord_base[None] + np.einsum("cnk,bk->bcn",
+                                              self.coord_jac, p)
+        x0, x1, y0, y1, lz = (c[:, i] for i in range(5))
+        sym = self.sym
+        bad = np.zeros(p.shape[0], bool)
+        bad |= ((x1 - x0 <= eps) | (y1 - y0 <= eps)
+                | (lz <= 0)).any(axis=1)
+        i, j = sym.lx_i, sym.lx_j
+        bad |= (np.minimum(y1[:, i], y1[:, j])
+                - np.maximum(y0[:, i], y0[:, j]) <= eps).any(axis=1)
+        i, j = sym.ly_i, sym.ly_j
+        bad |= (np.minimum(x1[:, i], x1[:, j])
+                - np.maximum(x0[:, i], x0[:, j]) <= eps).any(axis=1)
+        i, j = sym.v_i, sym.v_j
+        ox = np.minimum(x1[:, i], x1[:, j]) - np.maximum(x0[:, i], x0[:, j])
+        oy = np.minimum(y1[:, i], y1[:, j]) - np.maximum(y0[:, i], y0[:, j])
+        bad |= ((ox <= eps) | (oy <= eps)).any(axis=1)
+        for name, (idx, _) in self.scalar_slots.items():
+            if idx >= 0 and name != "t_ambient":
+                bad |= p[:, idx] < 0
+        if bad.any():
+            which = np.nonzero(bad)[0]
+            raise TopologyError(
+                f"{which.size} candidate(s) (first: row {which[0]}) leave "
+                f"the family's fixed-topology region: a placement offset "
+                f"collides with a neighboring cut line or an overlap "
+                f"degenerates. Shrink the sweep range "
+                f"(see param_bounds()).")
+
+    def param_bounds(self) -> np.ndarray:
+        """(P, 2) sampling box per parameter.
+
+        Offsets get a topology-derived bound: half the smallest gap between
+        any cut that moves with the parameter and any cut that does not
+        (conservative — candidates drawn inside the box and validated with
+        ``validate_params`` stay in-family). Thickness/HTC/ambient/scale
+        get conservative multiplicative boxes around the template value.
+        """
+        out = np.zeros((self.n_params, 2))
+        layer = self.grid.layer
+        for k, param in enumerate(self.params):
+            if param.kind in ("grid_dx", "offset_x", "grid_dy", "offset_y"):
+                axis = (0, 1) if param.kind.endswith("x") else (2, 3)
+                jac = self.coord_jac
+                slack = np.inf
+                for li in range(self.grid.n_layers):
+                    sel = layer == li
+                    cuts, moves = [], []
+                    for a in axis:
+                        cuts.append(self.coord_base[a][sel])
+                        moves.append(jac[a][sel][:, k] != 0)
+                    cuts = np.concatenate(cuts)
+                    moving = np.concatenate(moves)
+                    if moving.any() and (~moving).any():
+                        d = np.abs(cuts[moving][:, None]
+                                   - cuts[~moving][None, :])
+                        slack = min(slack, float(d[d > _EPS].min(
+                            initial=np.inf)))
+                if not np.isfinite(slack):
+                    slack = min(self.template.length, self.template.width)
+                out[k] = (-slack / 2, slack / 2)
+            elif param.kind == "thickness":
+                out[k] = (0.5 * param.base, 2.0 * param.base)
+            elif param.name == "htc_top":
+                out[k] = (0.25 * param.base, 4.0 * param.base)
+            elif param.name == "t_ambient":
+                out[k] = (param.base - 15.0, param.base + 15.0)
+            else:  # power_scale
+                out[k] = (0.5, 2.0)
+        return out
+
+    def sample_params(self, n: int, seed: int = 0,
+                      frac: float = 0.9) -> np.ndarray:
+        """(n, P) candidates drawn uniformly inside ``frac`` of the
+        sampling box (validated; the template itself is NOT included)."""
+        lo, hi = self.param_bounds().T
+        mid, half = 0.5 * (lo + hi), 0.5 * (hi - lo)
+        rng = np.random.default_rng(seed)
+        p = mid + rng.uniform(-frac, frac, (n, self.n_params)) * half
+        self.validate_params(p)
+        return p
+
+    def __repr__(self) -> str:
+        return (f"PackageFamily({self.template.name!r}, "
+                f"{self.n_params} params, {len(self.sites)} sites, "
+                f"n={self.grid.n})")

@@ -1,9 +1,12 @@
-"""Fidelity registry and the common ``ThermalSimulator`` protocol.
+"""Fidelity registry: the common ``ThermalSimulator`` protocol and the
+two-level single-package / package-family build API.
 
 MFIT's value proposition (paper Fig. 2) is swapping model fidelities per
 design stage — FEM-class reference for validation, thermal RC for design
 iteration, DSS for runtime management — over ONE geometry description.
-This module makes that swap a string:
+This module makes that swap a string, at two levels:
+
+Level 1 — one concrete package (unchanged API)::
 
     from repro.core import build
     sim = build(pkg, fidelity="rc")           # or "fvm", "dss",
@@ -14,13 +17,32 @@ This module makes that swap a string:
     roll = sim.make_simulator(dt)             # sim(state0, q[T,S]) -> (T,O)
     batch = sim.simulate_batch(th0, q, dt)    # (T,B,S) -> (T,B,O)
 
+Level 2 — a whole design space in one device call (PR 2)::
+
+    from repro.core import PackageFamily, build_family
+    fam = PackageFamily(pkg, params=("grid_offsets", "htc_top"))
+    sim = build_family(fam, fidelity="rc")    # or "dss", "fvm"
+    theta = sim.steady_state_batch(p, q)      # p (B,P) params, q (B,S)
+    temps = sim.observe_batch(theta, p)       # (B, n_obs) absolute degC
+    obs = sim.simulate_family(p, q_traj, dt)  # q (T,B,S) -> (T,B,n_obs)
+
+``build(pkg, fid)`` is the degenerate single-element case of the family
+API: a family whose parameter set is empty pins the template, and the
+batched simulators at B=1 reproduce ``build`` to solver tolerance (tested
+in ``tests/test_family.py``). The single-package path keeps its own
+seed-bitwise assembly.
+
 Every registered fidelity exposes the same observation-tag ordering
 (``sim.tags``, lexicographically sorted), so outputs are directly
 comparable across the ladder — the property the accuracy benchmarks and
 cross-fidelity tests rely on.
 
-Model modules register themselves via ``@register_fidelity(name)`` at
-import time; ``build()`` imports them lazily to avoid import cycles.
+Model modules register themselves via ``@register_fidelity(name)`` (and
+``@register_family_fidelity(name)`` for the batched level) at import time;
+``build``/``build_family`` import them lazily to avoid import cycles.
+Baseline emulations (hotspot/3dice/pact) model per-package external tools
+and deliberately have no family builder — ``build_family`` raises
+``NotImplementedError`` with the per-package fallback spelled out.
 """
 from __future__ import annotations
 
@@ -46,13 +68,73 @@ class ThermalSimulator(Protocol):
     def simulate_batch(self, theta0, q_traj, dt): ...  # (T,B,S) -> (T,B,O)
 
 
+@runtime_checkable
+class BatchedThermalSimulator(Protocol):
+    """What a family fidelity exposes: one fixed topology, a batch of
+    parameter vectors riding a device batch axis (see module docstring)."""
+
+    fidelity: str
+    tags: List[str]
+    source_names: List[str]
+    param_names: List[str]        # columns of the params matrix
+
+    def steady_state_batch(self, params, q_src): ...   # (B,P),(B,S) -> state
+
+    def observe_batch(self, state, params): ...        # -> (B, n_obs) degC
+
+    def simulate_family(self, params, q_traj, dt): ...  # (T,B,S) -> (T,B,O)
+
+
+def simulate_batch_via_vmap(model, state0, q_traj, dt, **opts):
+    """Shared batched-rollout helper: vmap ``model.make_simulator`` over
+    the batch axis and cache the vmapped callable per ``(dt, opts)``.
+
+    This is THE ``simulate_batch`` implementation for every fidelity whose
+    single-trace simulator is a jitted ``sim(state0, q[T,S])`` (thermal RC
+    and its baseline emulations, FVM). DSS does not use it — its step is
+    natively a batched GEMM (``kernels/dss_step``), so vmap would only add
+    overhead. Keeping the cache on the model instance keeps the jit cache
+    warm across calls without leaking compiled functions between models.
+
+    state0 (B, *state_shape), q_traj (T, B, S) -> (T, B, n_obs).
+    """
+    import jax
+    cache = model.__dict__.setdefault("_batch_sims", {})
+    key = (dt, tuple(sorted(opts.items())))
+    if key not in cache:
+        cache[key] = jax.vmap(model.make_simulator(dt, **opts),
+                              in_axes=(0, 1), out_axes=1)
+    return cache[key](state0, q_traj)
+
+
+def evict_stale_jits(cache: Dict, prefix: str = "simulate",
+                     keep: int = 8) -> None:
+    """Bound a model's per-dt compiled-function cache (insertion order):
+    call before inserting a new ``(prefix, dt)`` key so long-lived
+    processes sweeping many sampling periods don't accumulate one XLA
+    executable per dt forever (same bound as ``DSSModel._regen_cache``)."""
+    keys = [k for k in cache if isinstance(k, tuple) and k[0] == prefix]
+    while len(keys) >= keep:
+        cache.pop(keys.pop(0))
+
+
 _REGISTRY: Dict[str, Callable] = {}
+_FAMILY_REGISTRY: Dict[str, Callable] = {}
 
 
 def register_fidelity(name: str):
     """Decorator: register ``builder(pkg, **opts) -> ThermalSimulator``."""
     def deco(builder: Callable):
         _REGISTRY[name] = builder
+        return builder
+    return deco
+
+
+def register_family_fidelity(name: str):
+    """Decorator: register ``builder(family, **opts) ->
+    BatchedThermalSimulator`` for the batched design-space level."""
+    def deco(builder: Callable):
+        _FAMILY_REGISTRY[name] = builder
         return builder
     return deco
 
@@ -67,8 +149,14 @@ def available_fidelities() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def available_family_fidelities() -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_FAMILY_REGISTRY))
+
+
 def build(pkg, fidelity: str = "rc", **opts) -> "ThermalSimulator":
-    """Build a thermal simulator for ``pkg`` at the named fidelity.
+    """Build a thermal simulator for one concrete ``pkg`` at the named
+    fidelity (level 1; the single-element case of :func:`build_family`).
 
     Extra keyword options are forwarded to the fidelity's builder (e.g.
     ``dx_target`` for "fvm", ``cap_multipliers`` for "rc", ``ts`` for
@@ -79,3 +167,27 @@ def build(pkg, fidelity: str = "rc", **opts) -> "ThermalSimulator":
         raise KeyError(f"unknown fidelity {fidelity!r}; available: "
                        f"{', '.join(sorted(_REGISTRY))}")
     return _REGISTRY[fidelity](pkg, **opts)
+
+
+def build_family(family, fidelity: str = "rc",
+                 **opts) -> "BatchedThermalSimulator":
+    """Build a batched design-space simulator for a ``PackageFamily``.
+
+    The family's template is assembled ONCE (symbolic phase); every call
+    then evaluates a ``(B, P)`` parameter batch as a device batch axis
+    (numeric phase) — no per-candidate host assembly, jit, or dispatch.
+    Implemented for "rc", "dss" and "fvm"; the baseline emulations model
+    per-package external tools and raise ``NotImplementedError``.
+    """
+    _ensure_registered()
+    if fidelity not in _FAMILY_REGISTRY:
+        if fidelity in _REGISTRY:
+            raise NotImplementedError(
+                f"fidelity {fidelity!r} has no batched family builder "
+                f"(it emulates a per-package external tool); available "
+                f"family fidelities: {', '.join(sorted(_FAMILY_REGISTRY))}."
+                f" Fall back to build(family.instantiate(p), {fidelity!r}) "
+                f"in a loop.")
+        raise KeyError(f"unknown fidelity {fidelity!r}; available: "
+                       f"{', '.join(sorted(_REGISTRY))}")
+    return _FAMILY_REGISTRY[fidelity](family, **opts)

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fidelity import register_fidelity
+from .fidelity import (evict_stale_jits, register_family_fidelity,
+                       register_fidelity, simulate_batch_via_vmap)
 from .geometry import Package
 
 
@@ -157,7 +158,6 @@ class FVMReference:
         self.vm = vm
         self.tags = list(vm.obs_tags)
         self.source_names = list(vm.source_names)
-        self._batch_sims = {}
         self.cg_tol = cg_tol
         self.cg_maxiter = cg_maxiter
         gx, gy, gz, conv = vm.gx, vm.gy, vm.gz, vm.conv
@@ -231,11 +231,7 @@ class FVMReference:
 
     def simulate_batch(self, theta0, q_traj, dt: float) -> jnp.ndarray:
         """Batched rollout: theta0 (B,*shape), q_traj (T,B,S) -> (T,B,O)."""
-        if dt not in self._batch_sims:  # keep jit cache warm across calls
-            sim = self.make_simulator(dt)
-            self._batch_sims[dt] = jax.vmap(sim, in_axes=(0, 1),
-                                            out_axes=1)
-        return self._batch_sims[dt](theta0, q_traj)
+        return simulate_batch_via_vmap(self, theta0, q_traj, dt)
 
     def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
         shape = self.vm.shape if batch is None else (batch, *self.vm.shape)
@@ -259,3 +255,258 @@ def build_fvm(pkg: Package, dx_target: float = 0.5e-3,
     return FVMReference(voxelize(pkg, dx_target=dx_target,
                                  dz_target=dz_target, max_slabs=max_slabs),
                         cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+
+
+# ---------------------------------------------------------------------------
+# Batched design-space model: traced voxelization over a PackageFamily
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _FamilyBlock:
+    """Static per-block record for the traced voxelizer."""
+    zmask: np.ndarray        # (nz,) bool — slabs of the block's layer
+    x0: float                # template corners (offsets apply on top)
+    y0: float
+    x1: float
+    y1: float
+    wx: np.ndarray           # (P,) placement weights: bx0 = x0 + wx @ p
+    wy: np.ndarray
+    kx: float
+    ky: float
+    kz: float
+    cv: float
+    power_name: Optional[str]
+    tag: str
+
+
+class FVMFamilyModel:
+    """Finite-volume reference over a ``PackageFamily``.
+
+    The voxel grid (nx, ny, slab structure) is frozen by the template;
+    material/source/observation fields are re-rasterized per candidate as
+    a traced function of the parameter vector (block masks move with the
+    placement offsets exactly as ``voxelize`` would place them, so results
+    match a per-candidate ``build(pkg, "fvm")`` loop bit-for-mask). Solves
+    are the same matrix-free Jacobi-CG as :class:`FVMReference`, vmapped
+    over the batch. This is the VALIDATION fidelity of the family ladder —
+    run it at small B to ground the RC/DSS sweeps, not for the sweeps
+    themselves.
+    """
+
+    fidelity = "fvm"
+
+    def __init__(self, family, dx_target: float = 0.5e-3,
+                 dz_target: float = 0.15e-3, max_slabs: int = 6,
+                 cg_tol: float = 1e-6, cg_maxiter: int = 400,
+                 dtype=jnp.float32):
+        pkg = family.template
+        self.family = family
+        self.dtype = dtype
+        self.cg_tol, self.cg_maxiter = cg_tol, cg_maxiter
+        self.param_names = list(family.param_names)
+        self._slots = family.scalar_slots
+        self._htc_bottom = pkg.htc_bottom
+
+        nx = max(2, int(round(pkg.length / dx_target)))
+        ny = max(2, int(round(pkg.width / dx_target)))
+        self.dx, self.dy = pkg.length / nx, pkg.width / ny
+        xc = (np.arange(nx) + 0.5) * self.dx
+        yc = (np.arange(ny) + 0.5) * self.dy
+        XX, YY = np.meshgrid(xc, yc, indexing="xy")
+        self._xx = jnp.asarray(XX, dtype)
+        self._yy = jnp.asarray(YY, dtype)
+
+        # slab structure from the TEMPLATE thicknesses (topology fixed);
+        # per-slab thickness is affine in the thickness parameters
+        t_aff = family.thickness_affine()
+        dz_base, dz_jac, layer_of_slab = [], [], []
+        for li, layer in enumerate(pkg.layers):
+            ns = min(max_slabs,
+                     max(1, int(round(layer.thickness / dz_target))))
+            const, w = t_aff[li]
+            dz_base += [const / ns] * ns
+            dz_jac += [w / ns] * ns
+            layer_of_slab += [li] * ns
+        self.layer_of_slab = np.array(layer_of_slab)
+        nz = len(dz_base)
+        self.shape = (nz, ny, nx)
+        self._dz_base = jnp.asarray(np.array(dz_base), dtype)
+        self._dz_jac = jnp.asarray(np.array(dz_jac), dtype)
+
+        # static background fields + per-block records
+        bg = np.zeros((4, nz, ny, nx))
+        for z in range(nz):
+            m = pkg.layers[layer_of_slab[z]].material
+            bg[:, z] = np.array([m.kx, m.ky, m.kz, m.cv])[:, None, None]
+        self._bg = jnp.asarray(bg, dtype)
+        self.blocks = []
+        for li, b, wx, wy in family.block_affine():
+            zmask = self.layer_of_slab == li
+            self.blocks.append(_FamilyBlock(
+                zmask=zmask, x0=b.x0, y0=b.y0, x1=b.x1, y1=b.y1,
+                wx=wx, wy=wy, kx=b.material.kx, ky=b.material.ky,
+                kz=b.material.kz, cv=b.material.cv,
+                power_name=b.power_name, tag=b.tag))
+        self.source_names = sorted({b.power_name for b in self.blocks
+                                    if b.power_name is not None})
+        self.tags = sorted({b.tag for b in self.blocks if b.tag})
+        self._jits: dict = {}
+
+    @property
+    def n_vox(self) -> int:
+        return int(np.prod(self.shape))
+
+    # -- traced voxelization -------------------------------------------------
+    def _scalar(self, p, name):
+        idx, const = self._slots[name]
+        return p[idx] if idx >= 0 else jnp.asarray(const, self.dtype)
+
+    def _block_mask(self, blk: _FamilyBlock, p):
+        bx0 = blk.x0 + jnp.asarray(blk.wx, self.dtype) @ p
+        by0 = blk.y0 + jnp.asarray(blk.wy, self.dtype) @ p
+        bx1 = blk.x1 + jnp.asarray(blk.wx, self.dtype) @ p
+        by1 = blk.y1 + jnp.asarray(blk.wy, self.dtype) @ p
+        m2 = ((self._xx >= bx0) & (self._xx < bx1)
+              & (self._yy >= by0) & (self._yy < by1))
+        return jnp.asarray(blk.zmask)[:, None, None] & m2[None]
+
+    def _fields(self, p):
+        """One parameter vector -> voxel fields (pure jax; vmap me)."""
+        kx, ky, kz, cv = (self._bg[i] for i in range(4))
+        masks = []
+        for blk in self.blocks:
+            m3 = self._block_mask(blk, p)
+            masks.append(m3)
+            kx = jnp.where(m3, blk.kx, kx)
+            ky = jnp.where(m3, blk.ky, ky)
+            kz = jnp.where(m3, blk.kz, kz)
+            cv = jnp.where(m3, blk.cv, cv)
+
+        src = []
+        for name in self.source_names:
+            w = sum(m3.astype(self.dtype)
+                    for blk, m3 in zip(self.blocks, masks)
+                    if blk.power_name == name)
+            src.append(w / jnp.maximum(w.sum(), 1e-30))
+        src = jnp.stack(src) if src else jnp.zeros((0, *self.shape),
+                                                   self.dtype)
+        obs = []
+        for tag in self.tags:
+            w = sum(m3.astype(self.dtype)
+                    for blk, m3 in zip(self.blocks, masks)
+                    if blk.tag == tag)
+            obs.append(w / jnp.maximum(w.sum(), 1e-30))
+        obs = jnp.stack(obs) if obs else jnp.zeros((0, *self.shape),
+                                                   self.dtype)
+
+        dz = self._dz_base + self._dz_jac @ p
+        dzc = dz[:, None, None]
+        dx, dy = self.dx, self.dy
+        gx = 1.0 / (0.5 * dx / kx[:, :, :-1] + 0.5 * dx / kx[:, :, 1:]) \
+            * dy * dzc
+        gy = 1.0 / (0.5 * dy / ky[:, :-1, :] + 0.5 * dy / ky[:, 1:, :]) \
+            * dx * dzc
+        rz = 0.5 * dzc[:-1] / kz[:-1] + 0.5 * dzc[1:] / kz[1:]
+        gz = (dx * dy) / rz
+
+        nz = self.shape[0]
+        zidx = jnp.arange(nz)[:, None, None]
+        face = jnp.ones(self.shape, self.dtype) * dx * dy
+        conv = jnp.where(zidx == nz - 1,
+                         self._scalar(p, "htc_top") * face, 0.0) \
+            + jnp.where(zidx == 0, self._htc_bottom * face, 0.0)
+        return {"cvol": cv * dx * dy * dzc, "gx": gx, "gy": gy, "gz": gz,
+                "conv": conv, "src": src, "obs": obs,
+                "t_ambient": self._scalar(p, "t_ambient"),
+                "power_scale": self._scalar(p, "power_scale")}
+
+    @staticmethod
+    def _laplacian(f, theta):
+        out = jnp.zeros_like(theta)
+        fx = f["gx"] * (theta[:, :, 1:] - theta[:, :, :-1])
+        out = out.at[:, :, :-1].add(fx).at[:, :, 1:].add(-fx)
+        fy = f["gy"] * (theta[:, 1:, :] - theta[:, :-1, :])
+        out = out.at[:, :-1, :].add(fy).at[:, 1:, :].add(-fy)
+        fz = f["gz"] * (theta[1:] - theta[:-1])
+        out = out.at[:-1].add(fz).at[1:].add(-fz)
+        return out - f["conv"] * theta
+
+    @staticmethod
+    def _neg_l_diag(f):
+        d = jnp.zeros_like(f["cvol"])
+        d = d.at[:, :, :-1].add(f["gx"]).at[:, :, 1:].add(f["gx"])
+        d = d.at[:, :-1, :].add(f["gy"]).at[:, 1:, :].add(f["gy"])
+        d = d.at[:-1].add(f["gz"]).at[1:].add(f["gz"])
+        return d + f["conv"]
+
+    # -- batched solves ------------------------------------------------------
+    def steady_state_batch(self, params, q_src) -> jnp.ndarray:
+        """params (B, P), q_src (B, S) -> steady theta (B, nz, ny, nx)."""
+        if "steady" not in self._jits:
+            def one(p, qb):
+                f = self._fields(p)
+                rhs = jnp.einsum("s,szyx->zyx",
+                                 qb.astype(self.dtype)
+                                 * f["power_scale"], f["src"])
+                diag = self._neg_l_diag(f)
+                sol, _ = jax.scipy.sparse.linalg.cg(
+                    lambda x: -self._laplacian(f, x), rhs,
+                    tol=self.cg_tol, maxiter=self.cg_maxiter * 4,
+                    M=lambda x: x / diag)
+                return sol
+
+            self._jits["steady"] = jax.jit(jax.vmap(one))
+        return self._jits["steady"](jnp.asarray(params, self.dtype),
+                                    jnp.asarray(q_src, self.dtype))
+
+    def observe_batch(self, theta, params) -> jnp.ndarray:
+        """theta (B, nz, ny, nx), params (B, P) -> (B, n_obs) degC."""
+        if "observe" not in self._jits:
+            def one(th, p):
+                f = self._fields(p)
+                return jnp.einsum("ozyx,zyx->o", f["obs"], th) \
+                    + f["t_ambient"]
+
+            self._jits["observe"] = jax.jit(jax.vmap(one))
+        return self._jits["observe"](theta, jnp.asarray(params, self.dtype))
+
+    def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:
+        """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs)."""
+        key = ("simulate", float(dt))
+        if key not in self._jits:
+            evict_stale_jits(self._jits)
+
+            def one(p, q_t):
+                f = self._fields(p)
+                cdt = f["cvol"] / dt
+                diag = cdt + self._neg_l_diag(f)
+
+                def mv(x):
+                    return cdt * x - self._laplacian(f, x)
+
+                def body(th, qt):
+                    rhs = cdt * th + jnp.einsum(
+                        "s,szyx->zyx",
+                        qt.astype(self.dtype) * f["power_scale"],
+                        f["src"])
+                    th, _ = jax.scipy.sparse.linalg.cg(
+                        mv, rhs, x0=th, tol=self.cg_tol,
+                        maxiter=self.cg_maxiter, M=lambda x: x / diag)
+                    return th, jnp.einsum("ozyx,zyx->o", f["obs"], th)
+
+                th0 = jnp.zeros(self.shape, self.dtype)
+                _, o = jax.lax.scan(body, th0, q_t)
+                return o + f["t_ambient"]
+
+            self._jits[key] = jax.jit(jax.vmap(one, in_axes=(0, 1),
+                                               out_axes=1))
+        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+
+
+@register_family_fidelity("fvm")
+def build_fvm_family(family, dx_target: float = 0.5e-3,
+                     dz_target: float = 0.15e-3, max_slabs: int = 6,
+                     cg_tol: float = 1e-6, cg_maxiter: int = 400,
+                     dtype=jnp.float32) -> FVMFamilyModel:
+    return FVMFamilyModel(family, dx_target=dx_target, dz_target=dz_target,
+                          max_slabs=max_slabs, cg_tol=cg_tol,
+                          cg_maxiter=cg_maxiter, dtype=dtype)

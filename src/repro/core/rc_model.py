@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .assembly import adjacency_within, overlap_between
-from .fidelity import register_fidelity
+from .assembly import NumericAssembly, adjacency_within, overlap_between
+from .fidelity import (evict_stale_jits, register_family_fidelity,
+                       register_fidelity, simulate_batch_via_vmap)
 from .geometry import NodeGrid, Package, chiplet_tags, discretize
 
 _EPS = 1e-12
@@ -210,7 +211,6 @@ class ThermalRCModel:
         self.default_method = method
         self.tags = sorted({t for t in net.grid.tags if t})
         self.source_names = list(net.grid.source_names)
-        self._batch_sims = {}
         self.C = jnp.asarray(net.C, dtype)
         self.G = jnp.asarray(net.g_dense(), dtype)
         self.P = jnp.asarray(net.P, dtype)
@@ -327,12 +327,8 @@ class ThermalRCModel:
     def simulate_batch(self, theta0, q_traj, dt: float,
                        method: Optional[str] = None) -> jnp.ndarray:
         """Batched rollout: theta0 (B,N), q_traj (T,B,S) -> (T,B,n_obs)."""
-        key = (dt, method or self.default_method)
-        if key not in self._batch_sims:  # keep jit cache warm across calls
-            sim = self.make_simulator(dt, method)
-            self._batch_sims[key] = jax.vmap(sim, in_axes=(0, 1),
-                                             out_axes=1)
-        return self._batch_sims[key](theta0, q_traj)
+        return simulate_batch_via_vmap(self, theta0, q_traj, dt,
+                                       method=method or self.default_method)
 
     def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
         shape = (self.net.n,) if batch is None else (batch, self.net.n)
@@ -350,10 +346,233 @@ class ThermalRCModel:
         return vals, rects
 
 
+def _resolve_cap_multipliers(pkg: Package,
+                             cap_multipliers: Optional[dict]) -> dict:
+    """None -> tuned per-layer defaults for the package's stack (paper
+    §4.3 "Capacitance Tuning"; regenerate with scripts/tune_caps.py);
+    ``{}`` -> explicitly untuned; any other dict -> used as given."""
+    if cap_multipliers is not None:
+        return cap_multipliers
+    from .calibrate import default_cap_multipliers  # lazy: avoids cycle
+    return default_cap_multipliers(pkg)
+
+
 @register_fidelity("rc")
 def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
                 dtype=jnp.float32, method: str = "be_chol",
                 grid: Optional[NodeGrid] = None) -> ThermalRCModel:
+    """Registry builder. ``cap_multipliers=None`` applies the tuned
+    per-layer defaults for the package's layer stack (override with an
+    explicit dict, or pass ``{}`` for the untuned network)."""
     return ThermalRCModel(
-        build_network(pkg, grid=grid, cap_multipliers=cap_multipliers),
+        build_network(pkg, grid=grid,
+                      cap_multipliers=_resolve_cap_multipliers(
+                          pkg, cap_multipliers)),
         dtype=dtype, method=method)
+
+
+# ---------------------------------------------------------------------------
+# Batched design-space model: one family, many packages per device call
+# ---------------------------------------------------------------------------
+class RCFamilyModel:
+    """Thermal RC model over a :class:`~repro.core.family.PackageFamily`.
+
+    The family's template is assembled once into a fixed symbolic network;
+    every method then evaluates a ``(B, P)`` parameter batch as a pure-jax
+    numeric phase (``core/assembly.py``) plus a batched solve:
+
+      * ``steady_state_batch`` — template-preconditioned CG: the SPD
+        steady matrix ``-G(p)`` is preconditioned with the Cholesky factor
+        of the TEMPLATE's ``-G(p0)``, factored once on the host. Each
+        iteration is one shared BLAS-3 triangular-solve pair over the
+        whole batch plus an O(E) COO matvec per candidate — no O(N^3)
+        factorization per candidate, which is what makes the batched sweep
+        beat a per-package ``build()`` loop by an order of magnitude.
+      * ``simulate_family`` — per-candidate backward Euler: one batched
+        Cholesky of ``C/dt - G(p)`` amortized over all T steps.
+
+    Use ``dtype=jnp.float64`` (inside ``jax.experimental.enable_x64()``)
+    to validate against a per-candidate ``build()`` loop to <=1e-6 degC.
+    """
+
+    fidelity = "rc"
+
+    def __init__(self, family, cap_multipliers: Optional[dict] = None,
+                 dtype=jnp.float32, cg_tol: Optional[float] = None,
+                 cg_maxiter: int = 150):
+        self.family = family
+        self.num = NumericAssembly(
+            family.sym, dtype=dtype,
+            cap_multipliers=_resolve_cap_multipliers(family.template,
+                                                     cap_multipliers))
+        self.dtype = dtype
+        self.tags = list(family.sym.tags)
+        self.source_names = list(family.sym.source_names)
+        self.param_names = list(family.param_names)
+        # relative-residual targets chosen so the steady-state error stays
+        # orders of magnitude under the 1e-6 degC family-vs-loop bar (f64)
+        # / the f32 solve class, without over-iterating
+        self.cg_tol = cg_tol if cg_tol is not None else \
+            (1e-9 if dtype == jnp.float64 else 1e-6)
+        self.cg_maxiter = cg_maxiter
+        self._cbase = jnp.asarray(family.coord_base, dtype)
+        self._cjac = jnp.asarray(family.coord_jac, dtype)
+        self._slots = family.scalar_slots
+        self._htc_bottom = family.template.htc_bottom
+        self.t_ambient = family.template.t_ambient  # template value
+        # template preconditioner: factor -G(p0) once on the host (f64)
+        net0 = build_network(family.template, grid=family.grid)
+        self._chol0 = jnp.asarray(np.linalg.cholesky(-net0.g_dense()),
+                                  dtype)
+        self._jits: dict = {}
+
+    @property
+    def n(self) -> int:
+        return self.num.sym.n
+
+    # -- traced numeric phase ------------------------------------------------
+    def _scalar(self, p, name):
+        idx, const = self._slots[name]
+        return p[idx] if idx >= 0 else jnp.asarray(const, self.dtype)
+
+    def _network(self, p):
+        """One parameter vector -> network value dict (pure jax; vmap me).
+
+        This is the ``params -> (G_coo, C)`` numeric phase: coordinates
+        are an affine map of ``p``; values are evaluated over the fixed
+        edge pattern.
+        """
+        coords = self._cbase + jnp.einsum("cnk,k->cn", self._cjac,
+                                          p.astype(self.dtype))
+        vals = self.num.network(coords, self._scalar(p, "htc_top"),
+                                jnp.asarray(self._htc_bottom, self.dtype))
+        vals["t_ambient"] = self._scalar(p, "t_ambient")
+        vals["power_scale"] = self._scalar(p, "power_scale")
+        return vals
+
+    # -- batched steady state ------------------------------------------------
+    def _pcg(self, gvals, gconv, rhs):
+        """Batched PCG on (-G(p)) x = rhs, shared template preconditioner.
+
+        gvals (B, E_sym), gconv (B, N), rhs (B, N) -> x (B, N). Converged
+        batch elements are frozen (masked updates) while the rest iterate.
+        """
+        num = self.num
+        diag = jax.vmap(num.neg_g_diag)(gvals, gconv)
+
+        def matvec(x):
+            off = jax.vmap(
+                lambda g, xb: jax.ops.segment_sum(
+                    g * xb[num.cols], num.rows, num_segments=num.sym.n)
+            )(gvals, x)
+            return diag * x - off
+
+        chol0 = self._chol0
+
+        def prec(r):  # one BLAS-3 triangular-solve pair for the batch
+            return jax.scipy.linalg.cho_solve((chol0, True), r.T).T
+
+        bnorm = jnp.linalg.norm(rhs, axis=1)
+        bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+        tol = jnp.asarray(self.cg_tol, self.dtype)
+
+        def active(r):
+            return jnp.linalg.norm(r, axis=1) / bnorm > tol
+
+        def cond(state):
+            it, _, r, _, _ = state
+            return (it < self.cg_maxiter) & jnp.any(active(r))
+
+        def body(state):
+            it, x, r, p, rz = state
+            ap = matvec(p)
+            live = active(r)
+            denom = jnp.sum(p * ap, axis=1)
+            alpha = jnp.where(live, rz / jnp.where(denom == 0, 1.0, denom),
+                              0.0)
+            x = x + alpha[:, None] * p
+            r = r - alpha[:, None] * ap
+            z = prec(r)
+            rz_new = jnp.sum(r * z, axis=1)
+            beta = jnp.where(live, rz_new / jnp.where(rz == 0, 1.0, rz),
+                             0.0)
+            p = z + beta[:, None] * p
+            return it + 1, x, r, p, rz_new
+
+        z0 = prec(rhs)
+        state = (jnp.asarray(0), jnp.zeros_like(rhs), rhs, z0,
+                 jnp.sum(rhs * z0, axis=1))
+        return jax.lax.while_loop(cond, body, state)[1]
+
+    def steady_state_batch(self, params, q_src) -> jnp.ndarray:
+        """params (B, P), q_src (B, S) -> steady theta (B, N)."""
+        if "steady" not in self._jits:
+            def _steady(params, q):
+                def net(p):
+                    v = self._network(p)
+                    return (v["gvals"], v["gconv"], v["P"],
+                            v["power_scale"])
+
+                gvals, gconv, pmat, scale = jax.vmap(net)(params)
+                rhs = jnp.einsum("bns,bs->bn", pmat,
+                                 q.astype(self.dtype) * scale[:, None])
+                return self._pcg(gvals, gconv, rhs)
+
+            self._jits["steady"] = jax.jit(_steady)
+        return self._jits["steady"](jnp.asarray(params, self.dtype),
+                                    jnp.asarray(q_src, self.dtype))
+
+    def observe_batch(self, theta, params) -> jnp.ndarray:
+        """theta (B, N), params (B, P) -> absolute degC (B, n_obs)."""
+        if "observe" not in self._jits:
+            def _observe(theta, params):
+                def one(th, p):
+                    # XLA dead-code-eliminates the unused network values
+                    v = self._network(p)
+                    return v["H"] @ th + v["t_ambient"]
+
+                return jax.vmap(one)(theta, params)
+
+            self._jits["observe"] = jax.jit(_observe)
+        return self._jits["observe"](theta, jnp.asarray(params, self.dtype))
+
+    # -- batched transient ---------------------------------------------------
+    def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:
+        """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs).
+
+        Backward Euler from ambient; one batched Cholesky of
+        ``C/dt - G(p)`` per candidate, amortized over all T steps.
+        """
+        key = ("simulate", float(dt))
+        if key not in self._jits:
+            evict_stale_jits(self._jits)
+
+            def one(p, q_t):  # q_t (T, S)
+                v = self._network(p)
+                c_dt = v["C"] / dt
+                m = jnp.diag(c_dt) - self.num.dense_g(v["gvals"],
+                                                      v["gconv"])
+                chol = jnp.linalg.cholesky(m)
+                pmat, h = v["P"], v["H"]
+                scale = v["power_scale"]
+
+                def body(th, qt):
+                    rhs = c_dt * th + pmat @ (qt.astype(self.dtype)
+                                              * scale)
+                    th = jax.scipy.linalg.cho_solve((chol, True), rhs)
+                    return th, h @ th
+
+                th0 = jnp.zeros((self.n,), self.dtype)
+                _, obs = jax.lax.scan(body, th0, q_t)
+                return obs + v["t_ambient"]
+
+            self._jits[key] = jax.jit(jax.vmap(one, in_axes=(0, 1),
+                                               out_axes=1))
+        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+
+
+@register_family_fidelity("rc")
+def build_rc_family(family, cap_multipliers: Optional[dict] = None,
+                    dtype=jnp.float32, **opts) -> RCFamilyModel:
+    return RCFamilyModel(family, cap_multipliers=cap_multipliers,
+                         dtype=dtype, **opts)

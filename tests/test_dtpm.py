@@ -7,7 +7,7 @@ def _mgr(t_max=85.0, t_target=80.0):
     pkg = make_2p5d_package(16)
     mgr = ThermalManager.from_package(pkg, ts=0.01, t_max=t_max,
                                       t_target=t_target)
-    return mgr, mgr.dss.rc
+    return mgr, mgr.dss
 
 
 def test_throttle_holds_threshold():

@@ -1,0 +1,178 @@
+"""Batched design-space API: PackageFamily + build_family vs per-package
+build() loops (PR 2 tentpole). The batched numeric phase must reproduce
+the host per-candidate path to solver tolerance on Table-6 systems."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PackageFamily, TopologyError,
+                        available_family_fidelities, build, build_family,
+                        discretize, make_2p5d_package, make_3d_package)
+
+
+@pytest.fixture(scope="module")
+def fam16():
+    return PackageFamily(make_2p5d_package(16),
+                         params=("grid_offsets", "htc_top"))
+
+
+def _loop_steady(family, params, q, fidelity="rc", **opts):
+    out = []
+    for b in range(params.shape[0]):
+        m = build(family.instantiate(params[b]), fidelity, **opts)
+        out.append(np.asarray(m.observe(m.steady_state(q[b]))))
+    return np.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+def test_family_param_layout(fam16):
+    assert fam16.n_params == 9  # 4 column dx + 4 row dy + htc_top
+    assert fam16.param_names[:2] == ["grid_dx:0", "grid_dx:1"]
+    assert fam16.param_names[-1] == "htc_top"
+    base = fam16.base_params()
+    assert np.all(base[:8] == 0.0)
+    assert base[8] == fam16.template.htc_top
+
+
+def test_base_params_reproduce_template(fam16):
+    g0 = discretize(fam16.template)
+    g1 = discretize(fam16.instantiate(fam16.base_params()))
+    for f in ("x0", "x1", "y0", "y1", "lz"):
+        np.testing.assert_array_equal(getattr(g0, f), getattr(g1, f))
+    c = fam16.coords(fam16.base_params())
+    np.testing.assert_array_equal(c[0], g0.x0)
+    np.testing.assert_array_equal(c[4], g0.lz)
+
+
+def test_topology_changing_params_raise():
+    pkg = make_2p5d_package(16)
+    # independent per-chiplet offsets split the shared cut lines of the
+    # grid-aligned placement -> different cut-grid -> clear error
+    with pytest.raises(TopologyError, match="topology"):
+        PackageFamily(pkg, params=("offsets",))
+    with pytest.raises(TopologyError, match="topology"):
+        PackageFamily(pkg, params=("offset:chiplet_5",))
+    # discrete discretization knobs are rejected up front
+    with pytest.raises(TopologyError, match="topology"):
+        PackageFamily(pkg, params=("nx",))
+    with pytest.raises(ValueError, match="unknown parameter spec"):
+        PackageFamily(pkg, params=("warp_factor",))
+    with pytest.raises(ValueError, match="unknown layer"):
+        PackageFamily(pkg, params=("thickness:nope",))
+
+
+def test_validate_params_rejects_collisions(fam16):
+    lo, hi = fam16.param_bounds().T
+    bad = fam16.base_params()
+    bad[0] = 4 * hi[0]  # drive column 0 into its neighbor's cut lines
+    with pytest.raises(TopologyError, match="fixed-topology region"):
+        fam16.validate_params(bad)
+    fam16.validate_params(fam16.sample_params(8, seed=0))  # in-box is fine
+
+
+def test_family_registry_and_baseline_fallback(fam16):
+    assert set(available_family_fidelities()) >= {"rc", "dss", "fvm"}
+    with pytest.raises(NotImplementedError, match="per-package"):
+        build_family(fam16, "hotspot")
+    with pytest.raises(KeyError, match="unknown fidelity"):
+        build_family(fam16, "nope")
+
+
+# ---------------------------------------------------------------------------
+# batched vs per-candidate loop (Table-6 systems)
+# ---------------------------------------------------------------------------
+def test_steady_matches_loop_2p5d(fam16):
+    params = np.vstack([fam16.base_params(),
+                        fam16.sample_params(3, seed=1)])
+    q = np.full((4, 16), 3.0)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "rc", dtype=jnp.float64)
+        th = sim.steady_state_batch(params, q)
+        temps = np.asarray(sim.observe_batch(th, params))
+        loop = _loop_steady(fam16, params, q, dtype=jnp.float64)
+    assert np.abs(temps - loop).max() < 1e-6
+
+
+def test_steady_matches_loop_3d():
+    fam = PackageFamily(make_3d_package(16, tiers=3),
+                        params=("grid_offsets",))
+    params = np.vstack([fam.base_params(), fam.sample_params(2, seed=2)])
+    q = np.full((3, 48), 1.2)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam, "rc", dtype=jnp.float64)
+        th = sim.steady_state_batch(params, q)
+        temps = np.asarray(sim.observe_batch(th, params))
+        loop = _loop_steady(fam, params, q, dtype=jnp.float64)
+    assert np.abs(temps - loop).max() < 1e-6
+
+
+def test_steady_degenerate_b1(fam16):
+    params = fam16.sample_params(1, seed=3)
+    q = np.full((1, 16), 2.5)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "rc", dtype=jnp.float64)
+        temps = np.asarray(sim.observe_batch(
+            sim.steady_state_batch(params, q), params))
+        loop = _loop_steady(fam16, params, q, dtype=jnp.float64)
+    assert temps.shape == (1, 16)
+    assert np.abs(temps - loop).max() < 1e-6
+
+
+def test_transient_matches_loop(fam16):
+    params = fam16.sample_params(2, seed=4)
+    T, dt = 25, 0.01
+    q = np.full((T, 2, 16), 2.0)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "rc", dtype=jnp.float64)
+        obs = np.asarray(sim.simulate_family(params, q, dt))
+        assert obs.shape == (T, 2, 16)
+        for b in range(2):
+            m = build(fam16.instantiate(params[b]), "rc",
+                      dtype=jnp.float64)
+            single = np.asarray(m.make_simulator(dt)(m.zero_state(),
+                                                     q[:, b]))
+            assert np.abs(obs[:, b] - single).max() < 1e-6
+
+
+def test_dss_family_matches_loop(fam16):
+    params = fam16.sample_params(2, seed=5)
+    T = 25
+    q = np.full((T, 2, 16), 2.0)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "dss", ts=0.01, dtype=jnp.float64)
+        obs = np.asarray(sim.simulate_family(params, q))
+        for b in range(2):
+            m = build(fam16.instantiate(params[b]), "dss", ts=0.01,
+                      dtype=jnp.float64)
+            single = np.asarray(m.simulate(m.zero_state(), q[:, b]))
+            # expm conditioning bounds the match looser than the RC path
+            assert np.abs(obs[:, b] - single).max() < 5e-3
+
+
+def test_fvm_family_matches_loop():
+    fam = PackageFamily(make_2p5d_package(4), params=("grid_offsets",))
+    params = np.vstack([fam.base_params(), fam.sample_params(1, seed=6)])
+    q = np.full((2, 4), 3.0)
+    sim = build_family(fam, "fvm")
+    th = sim.steady_state_batch(params, q)
+    temps = np.asarray(sim.observe_batch(th, params))
+    loop = _loop_steady(fam, params, q, fidelity="fvm")
+    assert np.abs(temps - loop).max() < 2e-3  # f32 CG tolerance class
+
+
+def test_power_scale_and_ambient_params():
+    fam = PackageFamily(make_2p5d_package(4),
+                        params=("t_ambient", "power_scale"))
+    q = np.full((2, 4), 3.0)
+    params = np.array([[25.0, 1.0], [35.0, 2.0]])
+    sim = build_family(fam, "rc")
+    temps = np.asarray(sim.observe_batch(
+        sim.steady_state_batch(params, q), params))
+    rise0, rise1 = temps[0] - 25.0, temps[1] - 35.0
+    # theta is linear in q: doubling power_scale doubles the rise, and
+    # t_ambient shifts the observation only
+    np.testing.assert_allclose(rise1, 2 * rise0, rtol=1e-4)

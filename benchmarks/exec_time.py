@@ -13,7 +13,12 @@ Measures, per system size and per registered fidelity:
     through ``build_family`` (one symbolic assembly + one device call,
     template-preconditioned CG) vs the same candidates through a
     per-package ``build()`` loop — both in float64 so the two paths can be
-    checked against each other to <=1e-6 degC.
+    checked against each other to <=1e-6 degC;
+  * the ``sparse_solver`` section: dense Cholesky/solve vs the
+    matrix-free CG tier (``solver="cg"``, ``kernels/coo_matvec``) on a
+    node-count ladder up to the 256-chiplet 2.5D and 16x6-stack 3D
+    systems, plus the measured steady crossover that ``solver="auto"``
+    keys on.
 
 All models are obtained through the fidelity registry. Results land in a
 machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
@@ -67,7 +72,8 @@ def _host_time(fn, reps: int = 3) -> float:
 
 def _package(system: str):
     if system.startswith("3d"):
-        return make_3d_package(16, 3), 48, P3D
+        stacks, tiers = map(int, system[3:].split("x"))
+        return make_3d_package(stacks, tiers), stacks * tiers, P3D
     n = int(system.split("_")[1])
     return make_2p5d_package(n), n, P2P5D
 
@@ -201,6 +207,68 @@ def bench_dse_sweep(system: str = "2p5d_16", n_candidates: int = 128)\
     return out
 
 
+def bench_sparse_solver(system: str, n_steps: int = 50) -> dict:
+    """Solver tier (PR 3): dense Cholesky/solve vs the matrix-free CG
+    path built on the ``kernels/coo_matvec`` segment-sum kernel.
+
+    Per system: warm steady-solve time on both tiers, per-step transient
+    time (prefactored BE vs matrix-free BE-CG) including the dense tier's
+    one-time factorization, and the f32 steady agreement between tiers.
+    The scaling story is the point: past a couple thousand nodes the
+    dense O(N^3) factor/solve loses to O(E * iters), which is what
+    ``solver="auto"`` keys on (``fidelity.SOLVER_CROSSOVER_NODES``).
+    """
+    pkg, n_src, spec = _package(system)
+    dt = 0.01
+    q = np.full(n_src, 3.0, np.float32)
+    q_traj = wl1(n_src, dt=dt, spec=spec)[:n_steps].astype(np.float32)
+
+    out = {"system": system, "n_steps": n_steps}
+    models = {}
+    for tier in ("dense", "cg"):
+        def _build(tier=tier):
+            models[tier] = build(pkg, "rc", solver=tier)
+        out[f"build_{tier}_s"] = _host_time(_build, reps=1)
+        m = models[tier]
+        out["nodes"] = m.net.n
+        out["edges"] = int(m.net.rows.size)
+        out[f"steady_{tier}_s"] = _time(
+            lambda m=m: m.observe(m.steady_state(q)))
+        t0 = time.perf_counter()
+        sim = m.make_simulator(dt)
+        jax.block_until_ready(sim(m.zero_state(), q_traj))  # compile+factor
+        out[f"transient_cold_{tier}_s"] = time.perf_counter() - t0
+        t = _time(lambda: sim(m.zero_state(), q_traj), warmup=0, reps=2)
+        out[f"per_step_{tier}_s"] = t / n_steps
+    t_d = np.asarray(models["dense"].observe(
+        models["dense"].steady_state(q)))
+    t_c = np.asarray(models["cg"].observe(models["cg"].steady_state(q)))
+    out["steady_match_f32_degc"] = float(np.abs(t_d - t_c).max())
+    out["steady_speedup_cg"] = out["steady_dense_s"] \
+        / max(out["steady_cg_s"], 1e-12)
+    print(f"[sparse   ] {system:9s} n={out['nodes']:5d} "
+          f"dense={out['steady_dense_s']*1e3:8.2f}ms "
+          f"cg={out['steady_cg_s']*1e3:7.2f}ms "
+          f"speedup={out['steady_speedup_cg']:6.2f}x "
+          f"match={out['steady_match_f32_degc']:.1e}C", flush=True)
+    return out
+
+
+def _steady_crossover_nodes(rows: list) -> float:
+    """Dense-vs-CG steady crossover in nodes, log-log interpolated
+    between the neighboring measured systems (inf if CG never wins)."""
+    rows = sorted(rows, key=lambda r: r["nodes"])
+    for lo, hi in zip(rows, rows[1:]):
+        s0, s1 = lo["steady_speedup_cg"], hi["steady_speedup_cg"]
+        if s0 < 1.0 <= s1:
+            f = np.log(1.0 / s0) / np.log(s1 / s0)
+            return float(np.exp(np.log(lo["nodes"]) * (1 - f)
+                                + np.log(hi["nodes"]) * f))
+    if rows and rows[0]["steady_speedup_cg"] >= 1.0:
+        return float(rows[0]["nodes"])
+    return float("inf")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -213,6 +281,9 @@ def main(argv=None):
     if args.smoke:
         sim_systems, n_steps = ["2p5d_16"], 200
         assembly_systems = ["2p5d_16"]
+        # keep one >=4k-node point so the artifact always shows the
+        # dense-vs-CG gap at scale
+        sparse_systems = ["2p5d_16", "2p5d_256"]
         dse_b = args.dse_b or 32
     else:
         sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] \
@@ -220,14 +291,23 @@ def main(argv=None):
         n_steps = 4000 if args.full else 600
         # assembly speedup is always tracked on the paper's largest systems
         assembly_systems = ["2p5d_16", "2p5d_64", "3d_16x3"]
+        # the solver-tier scaling ladder: Table-6 sizes plus the
+        # beyond-the-paper 256-chiplet 2.5D and 16x6-stack 3D systems
+        sparse_systems = ["2p5d_16", "2p5d_64", "3d_16x6", "2p5d_256"]
         dse_b = args.dse_b or 128
     assembly = [bench_assembly(s) for s in assembly_systems]
     systems = [run_system(s, n_steps) for s in sim_systems]
+    sparse = [bench_sparse_solver(s) for s in sparse_systems]
+    crossover = _steady_crossover_nodes(sparse)
+    print(f"[sparse   ] steady dense-vs-CG crossover ~ {crossover:.0f} "
+          f"nodes", flush=True)
     # last: the sweep runs (and traces) under x64
     dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
     results = {"bench": "exec_time", "full": bool(args.full),
                "smoke": bool(args.smoke),
                "assembly": assembly, "systems": systems,
+               "sparse_solver": {"systems": sparse,
+                                 "steady_crossover_nodes": crossover},
                "dse_sweep": dse}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -239,6 +319,9 @@ def main(argv=None):
     for a in assembly:
         print(f"assembly,{a['system']},speedup,"
               f"{a['assembly_speedup']:.1f}x")
+    for s in sparse:
+        print(f"sparse,{s['system']},n{s['nodes']},steady_speedup,"
+              f"{s['steady_speedup_cg']:.2f}x")
     for d in dse:
         print(f"dse,{d['system']},B{d['b']},speedup,{d['speedup']:.1f}x")
     return results

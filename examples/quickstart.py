@@ -69,3 +69,20 @@ temps = np.asarray(fsim.observe_batch(
 print(f"\n[family] {family.n_params}-parameter placement family, "
       f"8 candidates in one call: peak spread "
       f"{temps.max(axis=1).min():.2f}..{temps.max(axis=1).max():.2f} C")
+
+# The solver tier: the same build() strings scale past the paper's
+# systems. solver="auto" keeps the exact dense Cholesky for small
+# networks and switches to the matrix-free CG path (Pallas COO
+# segment-sum matvec, no N x N matrix ever built) above the measured
+# crossover — here the 64-chiplet system picks it automatically.
+from repro.core import make_2p5d_package as _mk  # noqa: E402
+
+big = _mk(64)
+for solver in ("dense", "auto"):
+    sim = build(big, "rc", solver=solver)
+    t0 = time.time()
+    peak = float(np.asarray(sim.observe(
+        sim.steady_state(np.full(64, 3.0)))).max())
+    print(f"[solver] 2p5d_64 ({sim.net.n} nodes) solver={solver!r:8s}"
+          f" -> {sim.solver:5s} steady peak {peak:6.1f} C "
+          f"in {time.time()-t0:5.2f}s")

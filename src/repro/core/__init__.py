@@ -19,10 +19,11 @@ from .dss import (ContinuousSS, DSSFamilyModel, DSSModel, continuous_ss,
                   discretize_css, discretize_rc, spectral_radius)
 from .dtpm import DTPMState, ThermalManager
 from .family import FamilyParam, PackageFamily, TopologyError
-from .fidelity import (BatchedThermalSimulator, ThermalSimulator,
-                       available_family_fidelities, available_fidelities,
-                       build, build_family, register_family_fidelity,
-                       register_fidelity, simulate_batch_via_vmap)
+from .fidelity import (SOLVER_CROSSOVER_NODES, BatchedThermalSimulator,
+                       ThermalSimulator, available_family_fidelities,
+                       available_fidelities, build, build_family,
+                       register_family_fidelity, register_fidelity,
+                       resolve_solver, simulate_batch_via_vmap)
 from .fvm_ref import (FVMFamilyModel, FVMReference, VoxelModel, voxelize)
 from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
                        discretize, make_2p5d_package, make_3d_package,
@@ -42,10 +43,11 @@ __all__ = [
     "discretize_css", "discretize_rc", "spectral_radius",
     "DTPMState", "ThermalManager",
     "FamilyParam", "PackageFamily", "TopologyError",
-    "BatchedThermalSimulator", "ThermalSimulator",
+    "SOLVER_CROSSOVER_NODES", "BatchedThermalSimulator",
+    "ThermalSimulator",
     "available_family_fidelities", "available_fidelities",
     "build", "build_family", "register_family_fidelity",
-    "register_fidelity", "simulate_batch_via_vmap",
+    "register_fidelity", "resolve_solver", "simulate_batch_via_vmap",
     "FVMFamilyModel", "FVMReference", "VoxelModel", "voxelize",
     "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",

@@ -247,8 +247,11 @@ class NumericAssembly:
     """
 
     def __init__(self, sym: SymbolicNetwork, dtype=None,
-                 cap_multipliers: Optional[dict] = None):
+                 cap_multipliers: Optional[dict] = None,
+                 matvec_backend: str = "auto"):
         import jax.numpy as jnp
+
+        from ..kernels.coo_matvec.ops import coo_plan
         self._jnp = jnp
         self.sym = sym
         self.dtype = dtype or jnp.float32
@@ -258,6 +261,10 @@ class NumericAssembly:
         self.v_i, self.v_j = jnp.asarray(sym.v_i), jnp.asarray(sym.v_j)
         self.rows = jnp.asarray(sym.rows)
         self.cols = jnp.asarray(sym.cols)
+        # launch plan for the tiled segment-sum kernel; every matrix-free
+        # matvec over this pattern (single or batched) goes through it
+        self.plan = coo_plan(sym.rows, sym.cols, sym.n)
+        self.matvec_backend = matvec_backend
         self.kx, self.ky, self.kz = dev(sym.kx), dev(sym.ky), dev(sym.kz)
         cv_eff = sym.cv.copy()
         if cap_multipliers:
@@ -348,14 +355,14 @@ class NumericAssembly:
         }
 
     def neg_g_diag(self, gvals, gconv):
-        """Diagonal of -G = (off-diagonal row sums) + convection."""
-        return _segsum(self._jnp, gvals, self.rows, self.sym.n) + gconv
+        """Diagonal of -G = (off-diagonal row sums) + convection.
 
-    def neg_g_matvec(self, gvals, gconv, x):
-        """(-G) @ x without materializing a dense matrix (COO edges)."""
-        off = _segsum(self._jnp, gvals * x[self.cols], self.rows,
-                      self.sym.n)
-        return self.neg_g_diag(gvals, gconv) * x - off
+        gvals (..., E_sym), gconv (..., N) -> (..., N); batch axes ride
+        the segment-sum kernel directly (no vmap needed).
+        """
+        from ..kernels.coo_matvec.ops import coo_segment_sum
+        return coo_segment_sum(self.plan, gvals,
+                               backend=self.matvec_backend) + gconv
 
     def dense_g(self, gvals, gconv):
         """Paper Eq. 7 dense G (convection on the diagonal), traced."""

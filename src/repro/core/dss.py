@@ -70,6 +70,11 @@ class DSSModel:
     tags: list = dataclasses.field(default_factory=list)
     source_names: list = dataclasses.field(default_factory=list)
     css: Optional[ContinuousSS] = None  # minimal regeneration state (host)
+    # matrix-free steady solve (cg solver tier): a standalone jitted
+    # closure over O(E) COO arrays (NOT the parent RC model — see module
+    # docstring); shared unchanged by regenerated models
+    steady_fn: Optional[callable] = dataclasses.field(default=None,
+                                                      repr=False)
     _regen_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     fidelity = "dss"
@@ -125,12 +130,22 @@ class DSSModel:
         if key not in self._regen_cache:  # expm is O(N^3); pay it once
             if len(self._regen_cache) >= 8:  # bound long-lived processes
                 self._regen_cache.pop(next(iter(self._regen_cache)))
-            self._regen_cache[key] = discretize_css(self.css, ts=ts,
-                                                    dtype=self.ad.dtype)
+            self._regen_cache[key] = discretize_css(
+                self.css, ts=ts, dtype=self.ad.dtype,
+                steady_fn=self.steady_fn)
         return self._regen_cache[key]
 
     def steady_state(self, q_src) -> jnp.ndarray:
-        """ZOH fixed point: solve (I - Ad) theta = Bd q (host float64)."""
+        """ZOH fixed point: solve (I - Ad) theta = Bd q.
+
+        Dense tier: host float64 solve. cg tier (``steady_fn`` set by
+        ``build(pkg, "dss", solver="cg")``): the continuous fixed point
+        ``(-G)^-1 P q`` — mathematically identical to the ZOH fixed
+        point — solved matrix-free on the COO kernel, never forming an
+        N x N system.
+        """
+        if self.steady_fn is not None:
+            return jnp.asarray(self.steady_fn(q_src), self.ad.dtype)
         ad = np.asarray(self.ad, np.float64)
         bd = np.asarray(self.bd, np.float64)
         q = np.asarray(q_src, np.float64)
@@ -171,11 +186,13 @@ def continuous_ss(rc: ThermalRCModel) -> ContinuousSS:
 
 
 def discretize_css(css: ContinuousSS, ts: float = 0.01,
-                   dtype=jnp.float32) -> DSSModel:
+                   dtype=jnp.float32,
+                   steady_fn: Optional[callable] = None) -> DSSModel:
     """ZOH-discretize a continuous-time state space (paper Eq. 13).
 
     Computed in float64 on host (expm of a stiff matrix), stored in the
-    requested runtime dtype.
+    requested runtime dtype. ``steady_fn`` (cg solver tier) rides along
+    unchanged — the steady state is sampling-period independent.
     """
     ad = _expm(css.a * ts)
     bd = np.linalg.solve(css.a, ad - np.eye(css.a.shape[0])) @ css.b_src
@@ -184,7 +201,8 @@ def discretize_css(css: ContinuousSS, ts: float = 0.01,
                     bd_t=jnp.asarray(bd.T, dtype),
                     H=jnp.asarray(css.h, dtype), ts=ts,
                     t_ambient=css.t_ambient, tags=list(css.tags),
-                    source_names=list(css.source_names), css=css)
+                    source_names=list(css.source_names), css=css,
+                    steady_fn=steady_fn)
 
 
 def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
@@ -192,17 +210,33 @@ def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
     """Build the DSS model from a thermal RC model (paper Eq. 13).
 
     Only the minimal continuous-time (A, B, H) arrays are retained for
-    later regeneration — NOT ``rc`` itself (see module docstring).
+    later regeneration — NOT ``rc`` itself (see module docstring). If the
+    RC model runs on the "cg" solver tier, its standalone matrix-free
+    steady closure (O(E) arrays only) is carried over so ``steady_state``
+    stays matrix-free too.
     """
-    return discretize_css(continuous_ss(rc), ts=ts, dtype=dtype)
+    steady_fn = jax.jit(rc.make_steady_solver()) \
+        if rc.solver == "cg" else None
+    return discretize_css(continuous_ss(rc), ts=ts, dtype=dtype,
+                          steady_fn=steady_fn)
 
 
 @register_fidelity("dss")
 def build_dss(pkg: Package, ts: float = 0.01, cap_multipliers=None,
-              dtype=jnp.float32) -> DSSModel:
-    """Registry builder: package -> RC network -> exact-ZOH DSS model."""
-    return discretize_rc(build_model(pkg, cap_multipliers=cap_multipliers),
-                         ts=ts, dtype=dtype)
+              dtype=jnp.float32, solver: str = "dense",
+              cg_tol=None, cg_maxiter: int = 1000) -> DSSModel:
+    """Registry builder: package -> RC network -> exact-ZOH DSS model.
+
+    ``solver`` is the solver-tier knob: the ZOH discretization itself is
+    inherently dense (``expm``), so the tier governs the steady-state
+    path — "cg"/"auto" (above the crossover) solve the continuous fixed
+    point matrix-free on the COO kernel instead of the host dense solve.
+    ``dtype``/``cg_tol``/``cg_maxiter`` thread through to that solve.
+    """
+    return discretize_rc(
+        build_model(pkg, cap_multipliers=cap_multipliers, solver=solver,
+                    dtype=dtype, cg_tol=cg_tol, cg_maxiter=cg_maxiter),
+        ts=ts, dtype=dtype)
 
 
 def _expm(a: np.ndarray) -> np.ndarray:

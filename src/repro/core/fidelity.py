@@ -32,6 +32,22 @@ batched simulators at B=1 reproduce ``build`` to solver tolerance (tested
 in ``tests/test_family.py``). The single-package path keeps its own
 seed-bitwise assembly.
 
+Orthogonal to the fidelity axis is the SOLVER TIER (PR 3): every network
+fidelity accepts ``solver="dense" | "cg" | "auto"``::
+
+    sim = build(pkg, "rc", solver="cg")       # fully matrix-free
+    sim = build_family(fam, "rc", solver="auto")
+
+``"dense"`` is the prefactored Cholesky / ``expm`` path (exact, O(N^3)
+factor, O(N^2) memory — the right call for the paper's few-hundred-node
+networks); ``"cg"`` never materializes an N x N matrix: steady states
+and implicit transients run preconditioned conjugate gradients whose
+matvec is the O(E) COO segment-sum kernel (``kernels/coo_matvec``), the
+path that scales to the N >> 1k networks of 64+-chiplet systems.
+``"auto"`` picks by node count against the measured dense-vs-CG
+crossover (:data:`SOLVER_CROSSOVER_NODES`, tracked by the
+``sparse_solver`` section of ``BENCH_exec_time.json``).
+
 Every registered fidelity exposes the same observation-tag ordering
 (``sim.tags``, lexicographically sorted), so outputs are directly
 comparable across the ladder — the property the accuracy benchmarks and
@@ -116,6 +132,29 @@ def evict_stale_jits(cache: Dict, prefix: str = "simulate",
     keys = [k for k in cache if isinstance(k, tuple) and k[0] == prefix]
     while len(keys) >= keep:
         cache.pop(keys.pop(0))
+
+
+# Dense-vs-CG steady-solve crossover in NODES, measured by the
+# ``sparse_solver`` section of ``benchmarks/exec_time.py`` on this
+# container's CPU: the interpolated ``steady_crossover_nodes`` lands in
+# the ~0.7-1.5k range across runs (the two tiers are within noise of each
+# other at 564 nodes, dense is 4x behind by 2.1k and 20x behind by 8.2k),
+# so "auto" switches at the conservative top of that band — re-measure
+# when the hardware changes. ``solver="auto"`` picks CG at or above it.
+SOLVER_CROSSOVER_NODES = 1500
+
+_SOLVERS = ("dense", "cg", "auto")
+
+
+def resolve_solver(solver: str, n: int) -> str:
+    """Resolve the solver-tier knob to a concrete tier for an N-node
+    network: ``"auto"`` -> ``"cg"`` iff ``n >= SOLVER_CROSSOVER_NODES``."""
+    if solver not in _SOLVERS:
+        raise ValueError(f"unknown solver {solver!r}; expected one of "
+                         f"{', '.join(_SOLVERS)}")
+    if solver == "auto":
+        return "cg" if n >= SOLVER_CROSSOVER_NODES else "dense"
+    return solver
 
 
 _REGISTRY: Dict[str, Callable] = {}

@@ -148,18 +148,32 @@ def voxelize(pkg: Package, dx_target: float = 0.5e-3,
                       source_names=source_names)
 
 
+_FVM_DENSE_MAX_VOX = 20000  # dense (V, V) above this is an OOM foot-gun
+
+
 class FVMReference:
-    """Jitted transient/steady conduction solver on a VoxelModel."""
+    """Jitted transient/steady conduction solver on a VoxelModel.
+
+    solver tier: the stencil solver is natively matrix-free ("cg", also
+    what "auto" resolves to — there is no crossover to chase here).
+    ``solver="dense"`` assembles the (V, V) conduction matrix once and
+    swaps in dense solves (steady) and a prefactored Cholesky (stepping)
+    — a validation anchor for the sparse path on coarse grids, refused
+    above ``_FVM_DENSE_MAX_VOX`` voxels.
+    """
 
     fidelity = "fvm"
 
     def __init__(self, vm: VoxelModel, cg_tol: float = 1e-6,
-                 cg_maxiter: int = 400):
+                 cg_maxiter: int = 400, solver: str = "cg"):
         self.vm = vm
         self.tags = list(vm.obs_tags)
         self.source_names = list(vm.source_names)
         self.cg_tol = cg_tol
         self.cg_maxiter = cg_maxiter
+        if solver not in ("dense", "cg", "auto"):
+            raise ValueError(f"unknown solver {solver!r}")
+        self.solver = "cg" if solver == "auto" else solver
         gx, gy, gz, conv = vm.gx, vm.gy, vm.gz, vm.conv
         # diagonal of -L for Jacobi preconditioning
         d = jnp.zeros_like(vm.cvol)
@@ -167,6 +181,40 @@ class FVMReference:
         d = d.at[:, :-1, :].add(gy).at[:, 1:, :].add(gy)
         d = d.at[:-1].add(gz).at[1:].add(gz)
         self._neg_l_diag = d + conv
+        self._neg_l_dense = None
+        if self.solver == "dense":
+            if vm.n_vox > _FVM_DENSE_MAX_VOX:
+                raise ValueError(
+                    f"solver='dense' on {vm.n_vox} voxels would "
+                    f"materialize a {vm.n_vox}x{vm.n_vox} matrix; use "
+                    f"solver='cg' (the native path) or a coarser "
+                    f"dx_target")
+            self._neg_l_dense = jnp.asarray(self._assemble_dense())
+
+    def _assemble_dense(self) -> np.ndarray:
+        """Host-side dense -L (SPD, convection on the diagonal) from the
+        face-conductance stencil — the validation twin of the matrix-free
+        ``laplacian``."""
+        vm = self.vm
+        nz, ny, nx = vm.shape
+        v = vm.n_vox
+        idx = np.arange(v).reshape(nz, ny, nx)
+        a = np.zeros((v, v), np.float64)
+
+        def couple(i, j, g):
+            i, j, g = i.ravel(), j.ravel(), np.asarray(g,
+                                                       np.float64).ravel()
+            np.add.at(a, (i, j), -g)
+            np.add.at(a, (j, i), -g)
+            np.add.at(a, (i, i), g)
+            np.add.at(a, (j, j), g)
+
+        couple(idx[:, :, :-1], idx[:, :, 1:], vm.gx)
+        couple(idx[:, :-1, :], idx[:, 1:, :], vm.gy)
+        couple(idx[:-1], idx[1:], vm.gz)
+        diag = np.arange(v)
+        a[diag, diag] += np.asarray(vm.conv, np.float64).ravel()
+        return a.astype(np.float32)
 
     def laplacian(self, theta: jnp.ndarray) -> jnp.ndarray:
         """L theta (includes convection sink)."""
@@ -187,6 +235,9 @@ class FVMReference:
     def steady_state(self, q_src: jnp.ndarray) -> jnp.ndarray:
         """Solve -L theta = q; returns theta field."""
         rhs = self._q_field(q_src)
+        if self.solver == "dense":
+            sol = jnp.linalg.solve(self._neg_l_dense, rhs.ravel())
+            return sol.reshape(self.vm.shape)
         diag = self._neg_l_diag
 
         def mv(x):
@@ -210,6 +261,24 @@ class FVMReference:
         lap = self.laplacian
         qf = self._q_field
         tol, maxiter = self.cg_tol, self.cg_maxiter
+
+        if self.solver == "dense":  # prefactored implicit Euler
+            m = jnp.diag(cdt.ravel()) + self._neg_l_dense
+            chol = jax.scipy.linalg.cho_factor(m)
+
+            @jax.jit
+            def simulate_dense(theta0, q_traj):
+                def body(theta, q):
+                    rhs = (cdt * theta + qf(q)).ravel()
+                    th = jax.scipy.linalg.cho_solve(chol, rhs) \
+                        .reshape(vm.shape)
+                    return th, jnp.einsum("ozyx,zyx->o", vm.obs, th)
+
+                _, obs = jax.lax.scan(body, theta0.astype(jnp.float32),
+                                      q_traj)
+                return obs + vm.t_ambient
+
+            return simulate_dense
 
         def mv(x):
             return cdt * x - lap(x)
@@ -251,10 +320,12 @@ class FVMReference:
 @register_fidelity("fvm")
 def build_fvm(pkg: Package, dx_target: float = 0.5e-3,
               dz_target: float = 0.15e-3, max_slabs: int = 6,
-              cg_tol: float = 1e-6, cg_maxiter: int = 400) -> FVMReference:
+              cg_tol: float = 1e-6, cg_maxiter: int = 400,
+              solver: str = "cg") -> FVMReference:
     return FVMReference(voxelize(pkg, dx_target=dx_target,
                                  dz_target=dz_target, max_slabs=max_slabs),
-                        cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+                        cg_tol=cg_tol, cg_maxiter=cg_maxiter,
+                        solver=solver)
 
 
 # ---------------------------------------------------------------------------
@@ -506,7 +577,15 @@ class FVMFamilyModel:
 def build_fvm_family(family, dx_target: float = 0.5e-3,
                      dz_target: float = 0.15e-3, max_slabs: int = 6,
                      cg_tol: float = 1e-6, cg_maxiter: int = 400,
-                     dtype=jnp.float32) -> FVMFamilyModel:
+                     dtype=jnp.float32,
+                     solver: str = "cg") -> FVMFamilyModel:
+    if solver == "dense":
+        raise NotImplementedError(
+            "the FVM family solver is natively matrix-free; "
+            "solver='dense' exists only on the single-package "
+            "build(pkg, 'fvm') validation path")
+    if solver not in ("cg", "auto"):
+        raise ValueError(f"unknown solver {solver!r}")
     return FVMFamilyModel(family, dx_target=dx_target, dz_target=dz_target,
                           max_slabs=max_slabs, cg_tol=cg_tol,
                           cg_maxiter=cg_maxiter, dtype=dtype)

@@ -27,9 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.coo_matvec.ops import coo_matvec, coo_plan, coo_segment_sum
 from .assembly import NumericAssembly, adjacency_within, overlap_between
 from .fidelity import (evict_stale_jits, register_family_fidelity,
-                       register_fidelity, simulate_batch_via_vmap)
+                       register_fidelity, resolve_solver,
+                       simulate_batch_via_vmap)
 from .geometry import NodeGrid, Package, chiplet_tags, discretize
 
 _EPS = 1e-12
@@ -189,6 +191,11 @@ def observation_matrix(net: RCNetwork, tags: Optional[list] = None
 # ---------------------------------------------------------------------------
 # Solvers
 # ---------------------------------------------------------------------------
+# method mapping applied when the model runs on the "cg" solver tier:
+# dense-factorization integrators fall through to their matrix-free twin
+_CG_METHOD_MAP = {"be_chol": "be_cg", "be_lu": "be_cg", "trap": "trap_cg"}
+
+
 class ThermalRCModel:
     """Continuous-time thermal RC model with pluggable integrators.
 
@@ -199,39 +206,104 @@ class ThermalRCModel:
                   (large-N path)
       'be_lu'   — backward Euler, per-step dense solve (3D-ICE-like cost)
       'trap'    — trapezoidal per-step solve (PACT/Xyce TRAP-like)
+      'trap_cg' — trapezoidal, matrix-free Jacobi-preconditioned CG
       'rk4'     — explicit RK4 with stability substepping (HotSpot-like)
+
+    solver (the solver TIER, orthogonal to the integrator):
+      'dense'   — materialize the dense (N, N) G; steady state is a dense
+                  solve; integrators as requested. Exact; right for the
+                  paper's few-hundred-node networks.
+      'cg'      — fully matrix-free: the dense G is never built, steady
+                  state is Jacobi-preconditioned CG on the O(E) COO
+                  matvec kernel (``kernels/coo_matvec``), and dense
+                  integrators map to their matrix-free twin
+                  (be_chol/be_lu -> be_cg, trap -> trap_cg).
+      'auto'    — 'cg' at or above the measured crossover node count
+                  (``fidelity.SOLVER_CROSSOVER_NODES``), else 'dense'.
     """
 
     fidelity = "rc"
 
     def __init__(self, net: RCNetwork, dtype=jnp.float32,
-                 method: str = "be_chol"):
+                 method: str = "be_chol", solver: str = "dense",
+                 cg_tol: Optional[float] = None, cg_maxiter: int = 1000,
+                 matvec_backend: str = "auto"):
         self.net = net
         self.dtype = dtype
-        self.default_method = method
+        self.solver = resolve_solver(solver, net.n)
+        self.default_method = _CG_METHOD_MAP.get(method, method) \
+            if self.solver == "cg" else method
         self.tags = sorted({t for t in net.grid.tags if t})
         self.source_names = list(net.grid.source_names)
         self.C = jnp.asarray(net.C, dtype)
-        self.G = jnp.asarray(net.g_dense(), dtype)
         self.P = jnp.asarray(net.P, dtype)
         self.H = jnp.asarray(observation_matrix(net, self.tags), dtype)
         self.t_ambient = net.t_ambient
-        # coo copies for the matrix-free path
-        self._rows = jnp.asarray(net.rows)
-        self._cols = jnp.asarray(net.cols)
+        # COO pattern + values for the matrix-free path (always kept:
+        # O(E), and the be_cg/trap_cg integrators are method-selectable
+        # even on the dense tier)
+        self._plan = coo_plan(net.rows, net.cols, net.n)
+        self._backend = matvec_backend
         self._gvals = jnp.asarray(net.gvals, dtype)
         self._gdiag = jnp.asarray(
             -(np.bincount(net.rows, weights=net.gvals,
                           minlength=net.n) + net.gconv), dtype)
+        # steady-solve CG controls; f32 runs to its residual floor, so the
+        # default tolerance is tier-appropriate rather than aspirational
+        self.cg_tol = cg_tol if cg_tol is not None else \
+            (1e-11 if dtype == jnp.float64 else 1e-5)
+        self.cg_maxiter = cg_maxiter
+        self._G = None  # dense G, built lazily (never on the cg tier)
+
+    @property
+    def G(self) -> jnp.ndarray:
+        """Dense paper-Eq.-7 G — materialized on first access only (the
+        'cg' solver tier never touches it)."""
+        if self._G is None:
+            self._G = jnp.asarray(self.net.g_dense(), self.dtype)
+        return self._G
 
     # -- matrix-free G @ theta ----------------------------------------------
     def _gmatvec(self, theta):
-        off = jax.ops.segment_sum(self._gvals * theta[self._cols],
-                                  self._rows, num_segments=self.net.n)
+        off = coo_matvec(self._plan, self._gvals, theta,
+                         backend=self._backend)
         return off + self._gdiag * theta
 
+    def make_steady_solver(self):
+        """Standalone matrix-free steady solve ``q_src -> theta``.
+
+        The closure captures only O(E) arrays (plan, COO values, diagonal,
+        P) — NOT the model — so long-lived consumers (e.g. a DSS model on
+        the cg tier) can keep it without pinning a dense G or the parent
+        model. Solves (-G) theta = P q by Jacobi-preconditioned CG on the
+        COO matvec kernel.
+        """
+        plan, gvals, gdiag = self._plan, self._gvals, self._gdiag
+        p_mat, dtype, backend = self.P, self.dtype, self._backend
+        tol, maxiter = self.cg_tol, self.cg_maxiter
+        neg_diag = -gdiag
+
+        def steady(q_src):
+            rhs = p_mat @ jnp.asarray(q_src, dtype)
+
+            def mv(x):
+                return neg_diag * x - coo_matvec(plan, gvals, x,
+                                                 backend=backend)
+
+            sol, _ = jax.scipy.sparse.linalg.cg(
+                mv, rhs, tol=tol, maxiter=maxiter,
+                M=lambda x: x / neg_diag)
+            return sol
+
+        return steady
+
     def steady_state(self, q_src) -> jnp.ndarray:
-        """Steady theta: solve -G theta = P q."""
+        """Steady theta: solve -G theta = P q (dense or matrix-free CG,
+        by solver tier)."""
+        if self.solver == "cg":
+            if not hasattr(self, "_steady_fn"):
+                self._steady_fn = jax.jit(self.make_steady_solver())
+            return self._steady_fn(q_src)
         rhs = self.P @ jnp.asarray(q_src, self.dtype)
         return jnp.linalg.solve(-self.G, rhs)
 
@@ -242,10 +314,11 @@ class ThermalRCModel:
     def make_stepper(self, dt: float, method: Optional[str] = None):
         """Return step(theta, q_src) -> theta' (jittable)."""
         method = method or self.default_method
-        C, G, P = self.C, self.G, self.P
-        n = self.net.n
+        if self.solver == "cg":  # never factor/materialize dense G
+            method = _CG_METHOD_MAP.get(method, method)
+        C, P = self.C, self.P
         if method == "be_chol":
-            M = jnp.diag(C / dt) - G
+            M = jnp.diag(C / dt) - self.G
             chol = jax.scipy.linalg.cho_factor(M)
 
             def step(theta, q):
@@ -262,31 +335,62 @@ class ThermalRCModel:
             def step(theta, q):
                 rhs = cdt * theta + P @ q
                 sol, _ = jax.scipy.sparse.linalg.cg(
-                    mv, rhs, x0=theta, tol=1e-8, maxiter=200,
-                    M=lambda x: x / diag)
+                    mv, rhs, x0=theta, tol=min(self.cg_tol, 1e-8),
+                    maxiter=200, M=lambda x: x / diag)
                 return sol
         elif method == "be_lu":
-            M = jnp.diag(C / dt) - G
+            M = jnp.diag(C / dt) - self.G
 
             def step(theta, q):
                 rhs = C / dt * theta + P @ q
                 return jnp.linalg.solve(M, rhs)
         elif method == "trap":
-            Ml = jnp.diag(C / dt) - 0.5 * G
-            Mr = jnp.diag(C / dt) + 0.5 * G
+            Ml = jnp.diag(C / dt) - 0.5 * self.G
+            Mr = jnp.diag(C / dt) + 0.5 * self.G
 
             def step(theta, q):
                 rhs = Mr @ theta + P @ q
                 return jnp.linalg.solve(Ml, rhs)
+        elif method == "trap_cg":
+            # trapezoidal, matrix-free: (C/dt - G/2) th' = (C/dt + G/2) th
+            # + P q, the left side solved by Jacobi-preconditioned CG
+            cdt = C / dt
+            diag = cdt - 0.5 * self._gdiag
+            gm = self._gmatvec
+
+            def mv(x):
+                return cdt * x - 0.5 * gm(x)
+
+            def step(theta, q):
+                rhs = cdt * theta + 0.5 * gm(theta) + P @ q
+                sol, _ = jax.scipy.sparse.linalg.cg(
+                    mv, rhs, x0=theta, tol=min(self.cg_tol, 1e-8),
+                    maxiter=200, M=lambda x: x / diag)
+                return sol
         elif method == "rk4":
             # Gershgorin bound on |lambda|_max of C^-1 G -> substep count
-            lam = float(np.max((np.abs(self.net.g_dense()).sum(axis=1))
-                               / self.net.C))
+            if self.solver == "cg":  # O(E) bound; no dense materialization
+                row_abs = np.bincount(self.net.rows,
+                                      weights=np.abs(self.net.gvals),
+                                      minlength=self.net.n) \
+                    + np.abs(np.asarray(self._gdiag, np.float64))
+                lam = float(np.max(row_abs / self.net.C))
+                gmv = self._gmatvec
+
+                def gx(theta):
+                    return gmv(theta)
+            else:
+                G = self.G
+                lam = float(np.max((np.abs(self.net.g_dense())
+                                    .sum(axis=1)) / self.net.C))
+
+                def gx(theta):
+                    return G @ theta
             nsub = max(1, int(np.ceil(dt * lam / 2.5)))
             h = dt / nsub
 
             def f(theta, qn):
-                return (G @ theta + qn) / C
+                return (gx(theta) + qn) / C
 
             def step(theta, q):
                 qn = P @ q
@@ -360,20 +464,66 @@ def _resolve_cap_multipliers(pkg: Package,
 @register_fidelity("rc")
 def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
                 dtype=jnp.float32, method: str = "be_chol",
+                solver: str = "dense", cg_tol: Optional[float] = None,
+                cg_maxiter: int = 1000,
                 grid: Optional[NodeGrid] = None) -> ThermalRCModel:
     """Registry builder. ``cap_multipliers=None`` applies the tuned
     per-layer defaults for the package's layer stack (override with an
-    explicit dict, or pass ``{}`` for the untuned network)."""
+    explicit dict, or pass ``{}`` for the untuned network). ``solver``
+    selects the solver tier (see :class:`ThermalRCModel`)."""
     return ThermalRCModel(
         build_network(pkg, grid=grid,
                       cap_multipliers=_resolve_cap_multipliers(
                           pkg, cap_multipliers)),
-        dtype=dtype, method=method)
+        dtype=dtype, method=method, solver=solver, cg_tol=cg_tol,
+        cg_maxiter=cg_maxiter)
 
 
 # ---------------------------------------------------------------------------
 # Batched design-space model: one family, many packages per device call
 # ---------------------------------------------------------------------------
+def _batched_pcg(matvec, prec, rhs, x0, tol: float, maxiter: int):
+    """Masked batched preconditioned CG on SPD systems ``A x = rhs``.
+
+    ``matvec``/``prec`` map (B, N) -> (B, N); batch rows converge
+    independently against a RELATIVE residual ``tol`` and are frozen
+    (masked updates) while the rest iterate. Shared by the family steady
+    solve (template preconditioner) and the matrix-free family transient
+    (Jacobi preconditioner).
+    """
+    bnorm = jnp.linalg.norm(rhs, axis=1)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    tol = jnp.asarray(tol, rhs.dtype)
+
+    def active(r):
+        return jnp.linalg.norm(r, axis=1) / bnorm > tol
+
+    def cond(state):
+        it, _, r, _, _ = state
+        return (it < maxiter) & jnp.any(active(r))
+
+    def body(state):
+        it, x, r, p, rz = state
+        ap = matvec(p)
+        live = active(r)
+        denom = jnp.sum(p * ap, axis=1)
+        alpha = jnp.where(live, rz / jnp.where(denom == 0, 1.0, denom),
+                          0.0)
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * ap
+        z = prec(r)
+        rz_new = jnp.sum(r * z, axis=1)
+        beta = jnp.where(live, rz_new / jnp.where(rz == 0, 1.0, rz),
+                         0.0)
+        p = z + beta[:, None] * p
+        return it + 1, x, r, p, rz_new
+
+    r0 = rhs - matvec(x0)
+    z0 = prec(r0)
+    state = (jnp.asarray(0), x0, r0, z0, jnp.sum(r0 * z0, axis=1))
+    return jax.lax.while_loop(cond, body, state)[1]
+
+
 class RCFamilyModel:
     """Thermal RC model over a :class:`~repro.core.family.PackageFamily`.
 
@@ -388,8 +538,11 @@ class RCFamilyModel:
         whole batch plus an O(E) COO matvec per candidate — no O(N^3)
         factorization per candidate, which is what makes the batched sweep
         beat a per-package ``build()`` loop by an order of magnitude.
-      * ``simulate_family`` — per-candidate backward Euler: one batched
-        Cholesky of ``C/dt - G(p)`` amortized over all T steps.
+      * ``simulate_family`` — per-candidate backward Euler. On the
+        default "dense" solver tier, one batched Cholesky of
+        ``C/dt - G(p)`` amortized over all T steps; on the "cg" tier the
+        factorization is never formed — each step is a warm-started
+        batched Jacobi-CG on the COO matvec kernel, the large-N path.
 
     Use ``dtype=jnp.float64`` (inside ``jax.experimental.enable_x64()``)
     to validate against a per-candidate ``build()`` loop to <=1e-6 degC.
@@ -399,7 +552,7 @@ class RCFamilyModel:
 
     def __init__(self, family, cap_multipliers: Optional[dict] = None,
                  dtype=jnp.float32, cg_tol: Optional[float] = None,
-                 cg_maxiter: int = 150):
+                 cg_maxiter: int = 150, solver: str = "dense"):
         self.family = family
         self.num = NumericAssembly(
             family.sym, dtype=dtype,
@@ -415,6 +568,7 @@ class RCFamilyModel:
         self.cg_tol = cg_tol if cg_tol is not None else \
             (1e-9 if dtype == jnp.float64 else 1e-6)
         self.cg_maxiter = cg_maxiter
+        self.solver = resolve_solver(solver, family.sym.n)
         self._cbase = jnp.asarray(family.coord_base, dtype)
         self._cjac = jnp.asarray(family.coord_jac, dtype)
         self._slots = family.scalar_slots
@@ -454,55 +608,25 @@ class RCFamilyModel:
     def _pcg(self, gvals, gconv, rhs):
         """Batched PCG on (-G(p)) x = rhs, shared template preconditioner.
 
-        gvals (B, E_sym), gconv (B, N), rhs (B, N) -> x (B, N). Converged
-        batch elements are frozen (masked updates) while the rest iterate.
+        gvals (B, E_sym), gconv (B, N), rhs (B, N) -> x (B, N). The
+        matvec is the shared COO segment-sum kernel with the batch riding
+        its GEMM sublane axis (no vmap); the preconditioner is one BLAS-3
+        triangular-solve pair over the whole batch.
         """
         num = self.num
-        diag = jax.vmap(num.neg_g_diag)(gvals, gconv)
+        diag = num.neg_g_diag(gvals, gconv)  # (B, N), batched natively
 
         def matvec(x):
-            off = jax.vmap(
-                lambda g, xb: jax.ops.segment_sum(
-                    g * xb[num.cols], num.rows, num_segments=num.sym.n)
-            )(gvals, x)
-            return diag * x - off
+            return diag * x - coo_matvec(num.plan, gvals, x,
+                                         backend=num.matvec_backend)
 
         chol0 = self._chol0
 
         def prec(r):  # one BLAS-3 triangular-solve pair for the batch
             return jax.scipy.linalg.cho_solve((chol0, True), r.T).T
 
-        bnorm = jnp.linalg.norm(rhs, axis=1)
-        bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
-        tol = jnp.asarray(self.cg_tol, self.dtype)
-
-        def active(r):
-            return jnp.linalg.norm(r, axis=1) / bnorm > tol
-
-        def cond(state):
-            it, _, r, _, _ = state
-            return (it < self.cg_maxiter) & jnp.any(active(r))
-
-        def body(state):
-            it, x, r, p, rz = state
-            ap = matvec(p)
-            live = active(r)
-            denom = jnp.sum(p * ap, axis=1)
-            alpha = jnp.where(live, rz / jnp.where(denom == 0, 1.0, denom),
-                              0.0)
-            x = x + alpha[:, None] * p
-            r = r - alpha[:, None] * ap
-            z = prec(r)
-            rz_new = jnp.sum(r * z, axis=1)
-            beta = jnp.where(live, rz_new / jnp.where(rz == 0, 1.0, rz),
-                             0.0)
-            p = z + beta[:, None] * p
-            return it + 1, x, r, p, rz_new
-
-        z0 = prec(rhs)
-        state = (jnp.asarray(0), jnp.zeros_like(rhs), rhs, z0,
-                 jnp.sum(rhs * z0, axis=1))
-        return jax.lax.while_loop(cond, body, state)[1]
+        return _batched_pcg(matvec, prec, rhs, jnp.zeros_like(rhs),
+                            self.cg_tol, self.cg_maxiter)
 
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
         """params (B, P), q_src (B, S) -> steady theta (B, N)."""
@@ -540,12 +664,18 @@ class RCFamilyModel:
     def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:
         """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs).
 
-        Backward Euler from ambient; one batched Cholesky of
-        ``C/dt - G(p)`` per candidate, amortized over all T steps.
+        Backward Euler from ambient. Solver tier "dense": one batched
+        Cholesky of ``C/dt - G(p)`` per candidate, amortized over all T
+        steps. Tier "cg": no factorization is ever formed — every step is
+        a warm-started batched Jacobi-CG on the COO matvec kernel.
         """
         key = ("simulate", float(dt))
         if key not in self._jits:
             evict_stale_jits(self._jits)
+            if self.solver == "cg":
+                self._jits[key] = jax.jit(self._make_simulate_cg(dt))
+                return self._jits[key](
+                    jnp.asarray(params, self.dtype), q_traj)
 
             def one(p, q_t):  # q_t (T, S)
                 v = self._network(p)
@@ -569,6 +699,45 @@ class RCFamilyModel:
             self._jits[key] = jax.jit(jax.vmap(one, in_axes=(0, 1),
                                                out_axes=1))
         return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+
+    def _make_simulate_cg(self, dt: float):
+        """Matrix-free family transient: backward Euler where each step
+        is one batched Jacobi-CG solve of ``(C/dt - G(p)) th' = rhs``,
+        warm-started from the previous state (params, q_traj as in
+        :meth:`simulate_family`)."""
+        num = self.num
+        tol, maxiter = self.cg_tol, self.cg_maxiter
+
+        def simulate(params, q_traj):
+            def net(p):
+                v = self._network(p)
+                return (v["C"], v["gvals"], v["gconv"], v["P"], v["H"],
+                        v["t_ambient"], v["power_scale"])
+
+            c, gvals, gconv, pmat, h, t_amb, scale = jax.vmap(net)(params)
+            cdt = c / dt
+            neg_g_diag = num.neg_g_diag(gvals, gconv)   # (B, N)
+            mdiag = cdt + neg_g_diag                    # diag of C/dt - G
+
+            def matvec(x):
+                return mdiag * x - coo_matvec(num.plan, gvals, x,
+                                              backend=num.matvec_backend)
+
+            def prec(r):
+                return r / mdiag
+
+            def body(th, qt):  # th (B, N), qt (B, S)
+                rhs = cdt * th + jnp.einsum(
+                    "bns,bs->bn", pmat,
+                    qt.astype(self.dtype) * scale[:, None])
+                th = _batched_pcg(matvec, prec, rhs, th, tol, maxiter)
+                return th, jnp.einsum("bon,bn->bo", h, th)
+
+            th0 = jnp.zeros((params.shape[0], self.n), self.dtype)
+            _, obs = jax.lax.scan(body, th0, q_traj)
+            return obs + t_amb[None, :, None]
+
+        return simulate
 
 
 @register_family_fidelity("rc")

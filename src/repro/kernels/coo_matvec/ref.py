@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the COO matvec / segment-sum kernel.
+
+The sparse solver tier advances matrix-free RC solves with
+
+    y[r] = sum_{e : rows[e] == r} gvals[e] * x[cols[e]]
+
+i.e. the off-diagonal part of ``G @ x`` evaluated on the symmetric COO
+edge list of ``core/assembly.py``. The dense oracle materializes the
+(N, N) matrix explicitly — O(N^2) memory, only for validation — so the
+kernel and the jax ``segment_sum`` fallback can both be checked against
+ordinary dense algebra.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coo_segment_sum_ref(vals: jnp.ndarray, rows: jnp.ndarray,
+                        num_segments: int) -> jnp.ndarray:
+    """Dense one-hot oracle: vals (..., E), rows (E,) -> (..., N).
+
+    Accumulates in the input dtype via an explicit (E, N) one-hot matmul,
+    mathematically identical to ``jax.ops.segment_sum`` over the last
+    axis.
+    """
+    onehot = (rows[:, None]
+              == jnp.arange(num_segments)[None, :]).astype(vals.dtype)
+    return vals @ onehot
+
+
+def coo_matvec_ref(gvals: jnp.ndarray, rows: jnp.ndarray,
+                   cols: jnp.ndarray, x: jnp.ndarray,
+                   num_segments: int) -> jnp.ndarray:
+    """Dense oracle for the off-diagonal COO matvec.
+
+    gvals (..., E), x (..., N) -> (..., N): builds the dense (N, N)
+    off-diagonal matrix and multiplies. Leading axes of ``gvals`` and
+    ``x`` broadcast against each other (batched operands).
+    """
+    lead = jnp.broadcast_shapes(gvals.shape[:-1], x.shape[:-1])
+    g = jnp.broadcast_to(gvals, lead + gvals.shape[-1:])
+    a = jnp.zeros(lead + (num_segments, num_segments), gvals.dtype)
+    a = a.at[..., rows, cols].add(g)
+    return jnp.einsum("...nm,...m->...n", a,
+                      jnp.broadcast_to(x, lead + x.shape[-1:]))

@@ -164,6 +164,45 @@ def test_fvm_family_matches_loop():
     assert np.abs(temps - loop).max() < 2e-3  # f32 CG tolerance class
 
 
+# ---------------------------------------------------------------------------
+# solver tier (PR 3): matrix-free family transient vs the dense tier
+# ---------------------------------------------------------------------------
+def test_family_solver_registry(fam16):
+    with pytest.raises(NotImplementedError, match="matrix-free"):
+        build_family(fam16, "fvm", solver="dense")
+    with pytest.raises(ValueError, match="unknown solver"):
+        build_family(fam16, "rc", solver="sparse_lu")
+
+
+def test_transient_cross_solver_family(fam16):
+    params = fam16.sample_params(3, seed=7)
+    T, dt = 25, 0.01
+    q = np.full((T, 3, 16), 2.0)
+    with jax.experimental.enable_x64():
+        dense = build_family(fam16, "rc", dtype=jnp.float64,
+                             solver="dense")
+        cg = build_family(fam16, "rc", dtype=jnp.float64, solver="cg")
+        od = np.asarray(dense.simulate_family(params, q, dt))
+        oc = np.asarray(cg.simulate_family(params, q, dt))
+    assert np.abs(od - oc).max() < 1e-6
+
+
+def test_steady_degenerate_b1_cg(fam16):
+    """B=1 family on the cg tier still reproduces the per-package loop
+    — the degenerate case of the solver tier's batched path."""
+    params = fam16.sample_params(1, seed=8)
+    q = np.full((1, 16), 2.5)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "rc", dtype=jnp.float64, solver="cg")
+        temps = np.asarray(sim.observe_batch(
+            sim.steady_state_batch(params, q), params))
+        loop = _loop_steady(fam16, params, q, dtype=jnp.float64,
+                            solver="cg")
+        loop_dense = _loop_steady(fam16, params, q, dtype=jnp.float64)
+    assert np.abs(temps - loop).max() < 1e-6
+    assert np.abs(temps - loop_dense).max() < 1e-6
+
+
 def test_power_scale_and_ambient_params():
     fam = PackageFamily(make_2p5d_package(4),
                         params=("t_ambient", "power_scale"))

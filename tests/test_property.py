@@ -10,7 +10,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (ThermalRCModel, build_network, discretize_rc,
-                        make_2p5d_package, spectral_radius)
+                        make_2p5d_package, make_3d_package,
+                        spectral_radius)
 from repro.kernels.flash_attn.ref import gqa_ref
 from repro.models.layers import apply_rope
 
@@ -20,6 +21,23 @@ def package_cfg(draw):
     n_side = draw(st.sampled_from([1, 2]))
     htc = draw(st.floats(500.0, 8000.0))
     return n_side * n_side, htc
+
+
+@st.composite
+def packages(draw):
+    """Random VALID Package geometries across the generator space:
+    2.5D/3D, chiplet count, cooling, funnel nodes, ambient."""
+    kind = draw(st.sampled_from(["2p5d", "3d"]))
+    n_side = draw(st.sampled_from([1, 2, 3]))
+    htc = draw(st.floats(500.0, 20000.0))
+    t_amb = draw(st.floats(15.0, 45.0))
+    funnel = draw(st.booleans())
+    if kind == "3d":
+        tiers = draw(st.sampled_from([2, 3]))
+        return make_3d_package(n_side * n_side, tiers=tiers, htc_top=htc,
+                               t_ambient=t_amb, funnel=funnel)
+    return make_2p5d_package(n_side * n_side, htc_top=htc,
+                             t_ambient=t_amb, funnel=funnel)
 
 
 @given(package_cfg())
@@ -36,6 +54,32 @@ def test_rc_network_invariants(cfg):
     assert np.all(net.C > 0)
     # power matrix: columns sum to 1 (all power lands somewhere)
     np.testing.assert_allclose(net.P.sum(axis=0), 1.0, rtol=1e-9)
+
+
+@given(packages())
+@settings(max_examples=10, deadline=None)
+def test_neg_g_spd_after_assembly(pkg):
+    """-G of any generated geometry stays symmetric positive definite —
+    the property both the dense Cholesky tier and the CG tier rest on."""
+    net = build_network(pkg)
+    neg_g = -net.g_dense()
+    np.testing.assert_allclose(neg_g, neg_g.T, rtol=1e-9)
+    np.linalg.cholesky(neg_g)  # raises LinAlgError unless SPD
+
+
+@given(packages(), st.floats(0.3, 4.0))
+@settings(max_examples=8, deadline=None)
+def test_cg_solver_matches_dense_steady(pkg, p_chip):
+    """The matrix-free CG tier reproduces the dense steady state to
+    <=1e-6 degC on random valid geometries (f64)."""
+    with jax.experimental.enable_x64():
+        net = build_network(pkg)
+        dense = ThermalRCModel(net, dtype=jnp.float64, solver="dense")
+        cg = ThermalRCModel(net, dtype=jnp.float64, solver="cg")
+        q = np.full(len(dense.source_names), p_chip)
+        t_dense = np.asarray(dense.observe(dense.steady_state(q)))
+        t_cg = np.asarray(cg.observe(cg.steady_state(q)))
+    assert np.abs(t_dense - t_cg).max() < 1e-6
 
 
 @given(st.floats(0.2, 3.0), st.floats(0.001, 0.1))

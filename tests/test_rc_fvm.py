@@ -1,4 +1,8 @@
-"""Thermal RC vs FVM golden reference (paper Table 8 accuracy class)."""
+"""Thermal RC vs FVM golden reference (paper Table 8 accuracy class),
+plus the solver-tier cross-regressions: the matrix-free "cg" tier must
+reproduce the "dense" tier on every Table-6 system."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -55,3 +59,94 @@ def test_heatmap_shape(small_pkg):
     theta = rc.steady_state(np.full(4, 3.0))
     vals, rects = rc.layer_heatmap(theta, layer_idx=4)
     assert len(vals) == len(rects) > 0
+
+
+# ---------------------------------------------------------------------------
+# Solver-tier cross-regressions (PR 3): "cg" vs "dense" on Table-6 systems
+# ---------------------------------------------------------------------------
+def _table6_package(system):
+    if system.startswith("3d"):
+        stacks, tiers = map(int, system[3:].split("x"))
+        return make_3d_package(stacks, tiers=tiers), stacks * tiers
+    n = int(system.split("_")[1])
+    return make_2p5d_package(n), n
+
+
+def _cross_solver_err(system, p_chip=3.0):
+    pkg, s = _table6_package(system)
+    q = np.full(s, p_chip)
+    with jax.experimental.enable_x64():
+        dense = build(pkg, "rc", dtype=jnp.float64, solver="dense")
+        cg = build(pkg, "rc", dtype=jnp.float64, solver="cg")
+        t_dense = np.asarray(dense.observe(dense.steady_state(q)))
+        t_cg = np.asarray(cg.observe(cg.steady_state(q)))
+    return np.abs(t_dense - t_cg).max()
+
+
+@pytest.mark.parametrize("system", ["2p5d_16", "2p5d_36", "2p5d_64",
+                                    "3d_16x3"])
+def test_steady_cross_solver_table6(system):
+    assert _cross_solver_err(system) < 1e-6
+
+
+@pytest.mark.slow
+def test_steady_cross_solver_2p5d_256():
+    """The >=4k-node system of the sparse_solver benchmark (8196 nodes):
+    the CG tier that beats dense on wall clock also matches it."""
+    assert _cross_solver_err("2p5d_256") < 1e-6
+
+
+def test_transient_cross_solver(small_pkg):
+    """BE and TRAP integrators: matrix-free twin vs dense factorization."""
+    dt = 0.01
+    q = np.full((40, 4), 2.0)
+    with jax.experimental.enable_x64():
+        dense = build(small_pkg, "rc", dtype=jnp.float64, solver="dense")
+        cg = build(small_pkg, "rc", dtype=jnp.float64, solver="cg")
+        for method in ("be_chol", "trap"):
+            od = np.asarray(dense.make_simulator(dt, method=method)(
+                dense.zero_state(), q))
+            oc = np.asarray(cg.make_simulator(dt, method=method)(
+                cg.zero_state(), q))
+            assert np.abs(od - oc).max() < 1e-6, method
+
+
+def test_dss_steady_cross_solver(small_pkg):
+    """DSS ZOH fixed point vs the matrix-free continuous fixed point."""
+    q = np.full(4, 3.0)
+    with jax.experimental.enable_x64():
+        dense = build(small_pkg, "dss", ts=0.01, dtype=jnp.float64,
+                      solver="dense")
+        cg = build(small_pkg, "dss", ts=0.01, dtype=jnp.float64,
+                   solver="cg")
+        td = np.asarray(dense.observe(dense.steady_state(q)))
+        tc = np.asarray(cg.observe(cg.steady_state(q)))
+    assert np.abs(td - tc).max() < 1e-6
+
+
+def test_fvm_dense_solver_matches_cg(small_pkg):
+    """Coarse-grid dense FVM (validation tier) vs the native stencil CG."""
+    q = np.full(4, 3.0)
+    cg = build(small_pkg, "fvm", dx_target=1.5e-3, cg_tol=1e-7)
+    dense = build(small_pkg, "fvm", dx_target=1.5e-3, solver="dense")
+    tc = np.asarray(cg.observe(cg.steady_state(q)))
+    td = np.asarray(dense.observe(dense.steady_state(q)))
+    assert np.abs(td - tc).max() < 5e-2  # f32 stencil-CG tolerance class
+    dt, steps = 0.01, 15
+    qt = np.full((steps, 4), 2.0)
+    oc = np.asarray(cg.make_simulator(dt)(cg.zero_state(), qt))
+    od = np.asarray(dense.make_simulator(dt)(dense.zero_state(), qt))
+    assert np.abs(od - oc).max() < 5e-3
+
+
+@pytest.mark.slow
+def test_fine_fvm_rc_agreement():
+    """Fine-grid (0.25 mm) FVM reference vs the tuned RC model on the
+    16-chiplet Table-6 system — the accuracy anchor of the ladder."""
+    pkg = make_2p5d_package(16)
+    q = np.full(16, 3.0)
+    fvm = build(pkg, "fvm", dx_target=0.25e-3, cg_tol=1e-7)
+    rc = build(pkg, "rc", solver="auto")
+    t_fv = np.asarray(fvm.observe(fvm.steady_state(q)))
+    t_rc = np.asarray(rc.observe(rc.steady_state(q)))
+    assert np.abs(t_rc - t_fv).max() < 1.7  # paper's RC error bound

@@ -1,6 +1,8 @@
 """Paper Table 8: MAE + temperature-violation-prediction accuracy of
-thermal RC / DSS / HotSpot-like / 3D-ICE-like / PACT-like vs the FVM
-golden reference, across systems x workloads.
+thermal RC / DSS / ROM / HotSpot-like / 3D-ICE-like / PACT-like vs the
+FVM golden reference, across systems x workloads. The ROM row tracks the
+DSS row to within its <=0.1 degC projection error — same accuracy class,
+node-count-independent per-step cost.
 
 Full paper grid = {16,36,64-chip 2.5D, 16x3 3D} x WL1-6 at 40-55 s traces;
 the default here runs a reduced grid/time_scale sized for this container's
@@ -14,7 +16,7 @@ import os
 
 import numpy as np
 
-from repro.core import build, make_2p5d_package, make_3d_package
+from repro.core import build, package_from_name
 from repro.core.workloads import P2P5D, P3D, get_workload
 
 T_VIOLATION = 85.0  # paper §5.4
@@ -32,27 +34,36 @@ def violation_accuracy(ref_temps, model_temps, margin: float = 1.0):
     return 100.0 * float((ref_v & mdl_v).sum()) / float(n_ref)
 
 
+# models are workload-independent: cache them per (system, dx) so the
+# grid pays geometry -> model once per system, not once per cell (the
+# FVM reference voxelization and the ROM basis construction dominate)
+_MODEL_CACHE: dict = {}
+
+
+def _get_model(system: str, pkg, fidelity: str, dx: float):
+    key = (system, dx, fidelity)
+    if key not in _MODEL_CACHE:
+        opts = {"dx_target": dx, "cg_tol": 1e-6} if fidelity == "fvm" \
+            else {"ts": DT} if fidelity in ("dss", "rom") else {}
+        _MODEL_CACHE[key] = build(pkg, fidelity, **opts)
+    return _MODEL_CACHE[key]
+
+
 def run_cell(system: str, workload: str, time_scale: float, dx: float,
              verbose: bool = True) -> dict:
-    if system.startswith("3d"):
-        pkg = make_3d_package(16, 3)
-        n_src, spec = 48, P3D
-    else:
-        n = int(system.split("_")[1])
-        pkg = make_2p5d_package(n)
-        n_src, spec = n, P2P5D
+    pkg, n_src = package_from_name(system)
+    spec = P3D if system.startswith("3d") else P2P5D
     q = get_workload(workload, n_src, dt=DT, spec=spec,
                      time_scale=time_scale)
 
-    fvm = build(pkg, "fvm", dx_target=dx, cg_tol=1e-6)
+    fvm = _get_model(system, pkg, "fvm", dx)
     ref = np.asarray(fvm.make_simulator(DT)(fvm.zero_state(), q))
 
     out = {"system": system, "workload": workload, "models": {}}
-    names = {"rc": "thermal_rc", "dss": "dss", "hotspot": "hotspot",
-             "3dice": "3dice", "pact": "pact"}
+    names = {"rc": "thermal_rc", "dss": "dss", "rom": "rom",
+             "hotspot": "hotspot", "3dice": "3dice", "pact": "pact"}
     for fidelity, label in names.items():
-        mdl = build(pkg, fidelity, **({"ts": DT} if fidelity == "dss"
-                                      else {}))
+        mdl = _get_model(system, pkg, fidelity, dx)
         obs = np.asarray(mdl.make_simulator(DT)(mdl.zero_state(), q))
         out["models"][label] = _metrics(ref, obs)
     if verbose:

@@ -18,7 +18,12 @@ Measures, per system size and per registered fidelity:
     matrix-free CG tier (``solver="cg"``, ``kernels/coo_matvec``) on a
     node-count ladder up to the 256-chiplet 2.5D and 16x6-stack 3D
     systems, plus the measured steady crossover that ``solver="auto"``
-    keys on.
+    keys on (with a calibration warning when the constant drifts >2x
+    from the measurement);
+  * the ``rom`` section: the Krylov moment-matching ROM rung — basis
+    construction cost, reduction ratio N/r, per-step transient time vs
+    the dense tier (the node-count-independent headline) and max
+    observation error vs the full-order exact-ZOH response in f64.
 
 All models are obtained through the fidelity registry. Results land in a
 machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
@@ -40,13 +45,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PackageFamily, build, build_family, discretize, \
-    discretize_rc, make_2p5d_package, make_3d_package
+from repro.core import PackageFamily, build, build_family, continuous_ss, \
+    discretize, discretize_rc, package_from_name, zoh_discretize
 from repro.core.assembly_ref import build_network_ref
+from repro.core.fidelity import SOLVER_CROSSOVER_NODES
 from repro.core.rc_model import build_network
 from repro.core.workloads import P2P5D, P3D, wl1
 
-SIM_FIDELITIES = ("rc", "dss", "hotspot", "3dice", "pact")
+SIM_FIDELITIES = ("rc", "dss", "rom", "hotspot", "3dice", "pact")
 
 
 def _time(fn, warmup: int = 1, reps: int = 3) -> float:
@@ -71,11 +77,8 @@ def _host_time(fn, reps: int = 3) -> float:
 
 
 def _package(system: str):
-    if system.startswith("3d"):
-        stacks, tiers = map(int, system[3:].split("x"))
-        return make_3d_package(stacks, tiers), stacks * tiers, P3D
-    n = int(system.split("_")[1])
-    return make_2p5d_package(n), n, P2P5D
+    pkg, n_src = package_from_name(system)
+    return pkg, n_src, P3D if system.startswith("3d") else P2P5D
 
 
 def bench_assembly(system: str, legacy_reps: int = 1) -> dict:
@@ -117,7 +120,7 @@ def run_system(system: str, n_steps: int, verbose=True) -> dict:
     # constructed inside the timed call is kept and reused below
     built = {}
     for f in SIM_FIDELITIES:
-        opts = {"ts": dt} if f == "dss" else {}
+        opts = {"ts": dt} if f in ("dss", "rom") else {}
         def _build(f=f, opts=opts):
             built[f] = build(pkg, f, **opts)
         out["build_s"][f] = _host_time(_build, reps=1)
@@ -130,6 +133,8 @@ def run_system(system: str, n_steps: int, verbose=True) -> dict:
     out["times"]["dss_regeneration"] = time.perf_counter() - t0
     dss = built["dss"]
     record("dss", dss, dss.make_simulator(dt), dss.zero_state())
+    rom = built["rom"]
+    record("rom", rom, rom.make_simulator(dt), rom.zero_state())
 
     # batched DSE rollout (TPU-native capability; 64 candidates at once)
     B = 64
@@ -254,6 +259,71 @@ def bench_sparse_solver(system: str, n_steps: int = 50) -> dict:
     return out
 
 
+def bench_rom(system: str, n_steps: int = 400) -> dict:
+    """ROM rung (PR 4): Krylov moment-matching projection vs the dense
+    RC tier and the full-order DSS.
+
+    Per system: one-time basis-construction cost, reduction ratio N/r,
+    warm per-step transient time on the WL1 trace for the reduced model
+    vs the dense prefactored-BE tier (the headline: per-step cost
+    independent of node count), and the max observation error of the ROM
+    rollout against the full-order exact-ZOH (DSS) response evaluated in
+    float64 on the host — so the error metric reports basis truncation,
+    not f32 rollout noise.
+    """
+    pkg, n_src, spec = _package(system)
+    dt = 0.01
+    q = np.full(n_src, 3.0, np.float32)
+    q_traj = wl1(n_src, dt=dt, spec=spec)[:n_steps]
+
+    rc = build(pkg, "rc", solver="dense")
+    sim_rc = rc.make_simulator(dt)
+    t = _time(lambda: sim_rc(rc.zero_state(), q_traj.astype(np.float32)),
+              warmup=1, reps=2)
+    out = {"system": system, "n_steps": n_steps, "nodes": rc.net.n,
+           "per_step_dense_s": t / n_steps}
+
+    models = {}
+
+    def _build():
+        models["rom"] = build(pkg, "rom", ts=dt)
+    out["build_rom_s"] = _host_time(_build, reps=1)
+    rom = models["rom"]
+    out["r"] = rom.r
+    out["reduction_ratio"] = rom.reduction_ratio
+    sim_rom = rom.make_simulator(dt)
+    t = _time(lambda: sim_rom(rom.zero_state(),
+                              q_traj.astype(np.float32)))
+    out["per_step_rom_s"] = t / n_steps
+    out["transient_speedup_vs_dense"] = out["per_step_dense_s"] \
+        / max(out["per_step_rom_s"], 1e-12)
+    out["steady_rom_s"] = _time(
+        lambda: rom.observe(rom.steady_state(q)))
+
+    # full-order exact-ZOH reference AND the reduced rollout, both in
+    # float64 on the host, so the error metric isolates basis truncation
+    # (the timed f32 rollout above would otherwise fold its own ~1e-3 C
+    # accumulation noise into the number)
+    css = continuous_ss(rc)
+    ad, bd = zoh_discretize(css.a, css.b_src, dt)
+    ad_r, bd_r = zoh_discretize(rom._a, rom._b, dt)
+    theta = np.zeros(rc.net.n)
+    th_r = np.zeros(rom.r)
+    err = 0.0
+    for k in range(n_steps):
+        theta = ad @ theta + bd @ q_traj[k]
+        th_r = ad_r @ th_r + bd_r @ q_traj[k]
+        err = max(err, np.abs(rom.hhat @ th_r - css.h @ theta).max())
+    out["max_obs_err_vs_dss_degc"] = float(err)
+    print(f"[rom      ] {system:9s} n={out['nodes']:5d} r={rom.r:4d} "
+          f"({out['reduction_ratio']:5.1f}x smaller) "
+          f"per_step={out['per_step_rom_s']*1e6:7.1f}us "
+          f"({out['transient_speedup_vs_dense']:6.0f}x vs dense) "
+          f"err={out['max_obs_err_vs_dss_degc']:.3f}C "
+          f"build={out['build_rom_s']:.1f}s", flush=True)
+    return out
+
+
 def _steady_crossover_nodes(rows: list) -> float:
     """Dense-vs-CG steady crossover in nodes, log-log interpolated
     between the neighboring measured systems (inf if CG never wins)."""
@@ -267,6 +337,30 @@ def _steady_crossover_nodes(rows: list) -> float:
     if rows and rows[0]["steady_speedup_cg"] >= 1.0:
         return float(rows[0]["nodes"])
     return float("inf")
+
+
+def _check_crossover_calibration(measured: float) -> dict:
+    """Compare the measured dense-vs-CG steady crossover against the
+    ``solver="auto"`` constant and warn when the constant has drifted
+    more than 2x from what this container actually measures."""
+    const = SOLVER_CROSSOVER_NODES
+    if not (np.isfinite(measured) and measured > 0):
+        # CG never won on the measured ladder: the maximal drift — any
+        # finite constant routes large systems onto the losing tier
+        print(f"[sparse   ] WARNING: CG never beat dense on the measured "
+              f"ladder (crossover={measured}); solver='auto' with "
+              f"SOLVER_CROSSOVER_NODES={const} would still pick CG at "
+              f">={const} nodes — recalibrate the constant in "
+              f"core/fidelity.py", flush=True)
+        return {"constant": const, "calibration_ok": False}
+    ratio = max(const / measured, measured / const)
+    ok = ratio <= 2.0
+    if not ok:
+        print(f"[sparse   ] WARNING: SOLVER_CROSSOVER_NODES={const} "
+              f"is {ratio:.1f}x off the measured steady crossover "
+              f"(~{measured:.0f} nodes) — recalibrate the constant "
+              f"in core/fidelity.py", flush=True)
+    return {"constant": const, "calibration_ok": bool(ok)}
 
 
 def main(argv=None):
@@ -284,6 +378,9 @@ def main(argv=None):
         # keep one >=4k-node point so the artifact always shows the
         # dense-vs-CG gap at scale
         sparse_systems = ["2p5d_16", "2p5d_256"]
+        # the ROM section stays on the small system in CI (the 256-chip
+        # reference needs an N x N host expm — default/full runs only)
+        rom_systems, rom_steps = ["2p5d_16"], 200
         dse_b = args.dse_b or 32
     else:
         sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] \
@@ -294,6 +391,10 @@ def main(argv=None):
         # the solver-tier scaling ladder: Table-6 sizes plus the
         # beyond-the-paper 256-chiplet 2.5D and 16x6-stack 3D systems
         sparse_systems = ["2p5d_16", "2p5d_64", "3d_16x6", "2p5d_256"]
+        # ROM headline: per-step cost independent of N, incl. the
+        # 8196-node system where the dense tier pays ~56 ms/step
+        rom_systems = ["2p5d_16", "2p5d_64", "3d_16x6", "2p5d_256"]
+        rom_steps = 400
         dse_b = args.dse_b or 128
     assembly = [bench_assembly(s) for s in assembly_systems]
     systems = [run_system(s, n_steps) for s in sim_systems]
@@ -301,13 +402,22 @@ def main(argv=None):
     crossover = _steady_crossover_nodes(sparse)
     print(f"[sparse   ] steady dense-vs-CG crossover ~ {crossover:.0f} "
           f"nodes", flush=True)
+    # the 2x drift warning needs the full ladder: smoke's two-point
+    # (564/8196) interpolation is biased low, so don't raise false
+    # alarms from CI smoke runs
+    calibration = _check_crossover_calibration(crossover) \
+        if not args.smoke else {"constant": SOLVER_CROSSOVER_NODES,
+                                "calibration_ok": None}
+    rom = [bench_rom(s, n_steps=rom_steps) for s in rom_systems]
     # last: the sweep runs (and traces) under x64
     dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
     results = {"bench": "exec_time", "full": bool(args.full),
                "smoke": bool(args.smoke),
                "assembly": assembly, "systems": systems,
                "sparse_solver": {"systems": sparse,
-                                 "steady_crossover_nodes": crossover},
+                                 "steady_crossover_nodes": crossover,
+                                 **calibration},
+               "rom": rom,
                "dse_sweep": dse}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -322,6 +432,10 @@ def main(argv=None):
     for s in sparse:
         print(f"sparse,{s['system']},n{s['nodes']},steady_speedup,"
               f"{s['steady_speedup_cg']:.2f}x")
+    for s in rom:
+        print(f"rom,{s['system']},r{s['r']},per_step_speedup,"
+              f"{s['transient_speedup_vs_dense']:.0f}x,err,"
+              f"{s['max_obs_err_vs_dss_degc']:.3f}C")
     for d in dse:
         print(f"dse,{d['system']},B{d['b']},speedup,{d['speedup']:.1f}x")
     return results

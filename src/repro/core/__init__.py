@@ -2,7 +2,8 @@
 
 Fidelity ladder (paper Fig. 2):
   FVMReference (golden, stands in for FEM)  ->  ThermalRCModel (seconds)
-  ->  DSSModel (milliseconds)  ->  ThermalManager (runtime DTPM).
+  ->  DSSModel (milliseconds)  ->  ROMModel (microsecond steps,
+  node-count independent)  ->  ThermalManager (runtime DTPM).
 
 All fidelities share the ``ThermalSimulator`` protocol and are built by
 string through the registry, at two levels:
@@ -16,7 +17,8 @@ from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
 from .calibrate import (default_cap_multipliers, multipliers_by_layer_name,
                         tune_capacitance)
 from .dss import (ContinuousSS, DSSFamilyModel, DSSModel, continuous_ss,
-                  discretize_css, discretize_rc, spectral_radius)
+                  discretize_css, discretize_rc, spectral_radius,
+                  zoh_discretize)
 from .dtpm import DTPMState, ThermalManager
 from .family import FamilyParam, PackageFamily, TopologyError
 from .fidelity import (SOLVER_CROSSOVER_NODES, BatchedThermalSimulator,
@@ -27,11 +29,13 @@ from .fidelity import (SOLVER_CROSSOVER_NODES, BatchedThermalSimulator,
 from .fvm_ref import (FVMFamilyModel, FVMReference, VoxelModel, voxelize)
 from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
                        discretize, make_2p5d_package, make_3d_package,
-                       make_tpu_tray_package)
+                       make_tpu_tray_package, package_from_name)
 from .materials import MATERIALS, HeatsinkSpec, Material
 from .power import V5E, HardwareSpec, StepCost, chip_power
 from .rc_model import (RCFamilyModel, RCNetwork, ThermalRCModel,
                        build_model, build_network, observation_matrix)
+from .rom import (ROMFamilyModel, ROMModel, build_rom, krylov_basis,
+                  project_network)
 from .workloads import ALL_WORKLOADS, P2P5D, P3D, PowerSpec, get_workload
 
 __all__ = [
@@ -41,6 +45,7 @@ __all__ = [
     "tune_capacitance",
     "ContinuousSS", "DSSFamilyModel", "DSSModel", "continuous_ss",
     "discretize_css", "discretize_rc", "spectral_radius",
+    "zoh_discretize",
     "DTPMState", "ThermalManager",
     "FamilyParam", "PackageFamily", "TopologyError",
     "SOLVER_CROSSOVER_NODES", "BatchedThermalSimulator",
@@ -51,9 +56,12 @@ __all__ = [
     "FVMFamilyModel", "FVMReference", "VoxelModel", "voxelize",
     "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",
+    "package_from_name",
     "MATERIALS", "HeatsinkSpec", "Material",
     "V5E", "HardwareSpec", "StepCost", "chip_power",
     "RCFamilyModel", "RCNetwork", "ThermalRCModel", "build_model",
     "build_network", "observation_matrix",
+    "ROMFamilyModel", "ROMModel", "build_rom", "krylov_basis",
+    "project_network",
     "ALL_WORKLOADS", "P2P5D", "P3D", "PowerSpec", "get_workload",
 ]

@@ -185,6 +185,21 @@ def continuous_ss(rc: ThermalRCModel) -> ContinuousSS:
                         source_names=list(rc.source_names))
 
 
+def zoh_discretize(a: np.ndarray, b: np.ndarray, ts: float):
+    """Exact zero-order-hold discretization (paper Eq. 13), host f64:
+    ``Ad = expm(A Ts)``, ``Bd = A^-1 (Ad - I) B``.
+
+    THE discretization of the ladder's state-space rungs: the full-order
+    DSS model feeds it (N x N), and the ROM rung (``core/rom.py``) feeds
+    it the reduced r x r system — same math, node-count-independent cost.
+    """
+    a = np.asarray(a, np.float64)
+    ad = _expm(a * ts)
+    bd = np.linalg.solve(a, ad - np.eye(a.shape[0])) \
+        @ np.asarray(b, np.float64)
+    return ad, bd
+
+
 def discretize_css(css: ContinuousSS, ts: float = 0.01,
                    dtype=jnp.float32,
                    steady_fn: Optional[callable] = None) -> DSSModel:
@@ -194,8 +209,7 @@ def discretize_css(css: ContinuousSS, ts: float = 0.01,
     requested runtime dtype. ``steady_fn`` (cg solver tier) rides along
     unchanged — the steady state is sampling-period independent.
     """
-    ad = _expm(css.a * ts)
-    bd = np.linalg.solve(css.a, ad - np.eye(css.a.shape[0])) @ css.b_src
+    ad, bd = zoh_discretize(css.a, css.b_src, ts)
     return DSSModel(ad=jnp.asarray(ad, dtype), bd=jnp.asarray(bd, dtype),
                     ad_t=jnp.asarray(ad.T, dtype),
                     bd_t=jnp.asarray(bd.T, dtype),
@@ -215,8 +229,9 @@ def discretize_rc(rc: ThermalRCModel, ts: float = 0.01,
     steady closure (O(E) arrays only) is carried over so ``steady_state``
     stays matrix-free too.
     """
-    steady_fn = jax.jit(rc.make_steady_solver()) \
-        if rc.solver == "cg" else None
+    # ready-to-call (the device part is jitted inside; on the f32 tier
+    # it is the mixed-precision refined solve, no x64 required)
+    steady_fn = rc.make_steady_solver() if rc.solver == "cg" else None
     return discretize_css(continuous_ss(rc), ts=ts, dtype=dtype,
                           steady_fn=steady_fn)
 
@@ -260,6 +275,32 @@ def spectral_radius(dss: DSSModel) -> float:
 # ---------------------------------------------------------------------------
 # Batched design-space model
 # ---------------------------------------------------------------------------
+def family_zoh_simulate(discretize_one, n_state: int, dtype):
+    """Shared family-transient kernel of the state-space rungs.
+
+    ``discretize_one(p) -> (ad, bd, h, t_amb, scale)`` is the traced
+    per-candidate exact-ZOH discretization — full-order N x N for the
+    DSS family, reduced r x r for the ROM family. The returned
+    ``simulate(params, q_traj)`` (ready to jit) vmaps it over the
+    parameter batch and rolls the trace with one batched GEMM pair per
+    step, from the zero state, emitting absolute degC observations.
+    """
+    def simulate(params, q_traj):
+        ad, bd, h, t_amb, scale = jax.vmap(discretize_one)(params)
+
+        def body(th, qt):  # th (B, n_state), qt (B, S)
+            q = qt.astype(th.dtype) * scale[:, None]
+            th = jnp.einsum("bnm,bm->bn", ad, th) \
+                + jnp.einsum("bns,bs->bn", bd, q)
+            return th, jnp.einsum("bon,bn->bo", h, th)
+
+        th0 = jnp.zeros((params.shape[0], n_state), dtype)
+        _, obs = jax.lax.scan(body, th0, q_traj)
+        return obs + t_amb[None, :, None]
+
+    return simulate
+
+
 class DSSFamilyModel:
     """DSS model over a ``PackageFamily``: per-candidate exact-ZOH
     discretization as a traced, vmapped function of the parameter vector.
@@ -305,7 +346,7 @@ class DSSFamilyModel:
         ``dt`` defaults to the built ``ts``; any other value simply traces
         a new discretization (regeneration is part of the same jit)."""
         dt = self.ts if dt is None else float(dt)
-        key = ("simulate", dt)
+        key = ("simulate", round(dt, 12))  # match _regenerated's keying
         if key not in self._jits:
             evict_stale_jits(self._jits)
             rcf = self.rcf
@@ -320,20 +361,8 @@ class DSSFamilyModel:
                 bd = jnp.linalg.solve(a, ad - eye) @ (v["P"] / c[:, None])
                 return (ad, bd, v["H"], v["t_ambient"], v["power_scale"])
 
-            def _simulate(params, q_traj):
-                ad, bd, h, t_amb, scale = jax.vmap(discretize_one)(params)
-
-                def body(th, qt):  # th (B,N), qt (B,S)
-                    q = qt.astype(th.dtype) * scale[:, None]
-                    th = jnp.einsum("bnm,bm->bn", ad, th) \
-                        + jnp.einsum("bns,bs->bn", bd, q)
-                    return th, jnp.einsum("bon,bn->bo", h, th)
-
-                th0 = jnp.zeros((params.shape[0], self.n), self.dtype)
-                _, obs = jax.lax.scan(body, th0, q_traj)
-                return obs + t_amb[None, :, None]
-
-            self._jits[key] = jax.jit(_simulate)
+            self._jits[key] = jax.jit(family_zoh_simulate(
+                discretize_one, self.n, self.dtype))
         return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
 
 

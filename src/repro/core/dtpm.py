@@ -1,11 +1,18 @@
-"""Dynamic thermal & power management on top of the DSS model (paper §1,
-§4.4: "DSS models ... enabling runtime thermal management").
+"""Dynamic thermal & power management on top of the DSS-class models
+(paper §1, §4.4: "DSS models ... enabling runtime thermal management").
 
-The ThermalManager embeds the millisecond-class DSS model in the training /
-serving loop: each step it advances the thermal state from the measured
-chip powers, PREDICTS the next-step temperature, and adjusts a DVFS-style
-throttle to keep the package under the violation threshold (85 C per paper
-§5.4). Fully jittable — the controller adds two small GEMVs per step.
+The ThermalManager embeds a millisecond-class state-space model in the
+training / serving loop: each step it advances the thermal state from the
+measured chip powers, PREDICTS the next-step temperature, and adjusts a
+DVFS-style throttle to keep the package under the violation threshold
+(85 C per paper §5.4). Fully jittable — the controller adds two small
+GEMVs per step.
+
+The manager consumes the ``(ad, bd, H, t_ambient, n)`` surface shared by
+the full-order :class:`~repro.core.dss.DSSModel` and the reduced-order
+:class:`~repro.core.rom.ROMModel`, so ``from_package(pkg,
+fidelity="rom")`` runs the same controller on the ROM rung: per-step cost
+r x r instead of N x N — the large-package serving configuration.
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ class DTPMState(NamedTuple):
 
 @dataclasses.dataclass
 class ThermalManager:
-    dss: DSSModel
+    dss: DSSModel             # any (ad, bd, H) state-space rung: dss | rom
     t_max: float = 85.0       # violation threshold (paper §5.4)
     t_target: float = 80.0    # control setpoint
     down: float = 0.88        # multiplicative backoff on predicted violation
@@ -35,15 +42,23 @@ class ThermalManager:
 
     @classmethod
     def from_package(cls, pkg, ts: float = 0.01, build_opts: dict = None,
-                     **control) -> "ThermalManager":
-        """Build the controller's DSS model through the fidelity registry.
+                     fidelity: str = "dss", **control) -> "ThermalManager":
+        """Build the controller's state-space model through the fidelity
+        registry. ``fidelity`` picks the rung: "dss" (full order, exact
+        ZOH of the RC network) or "rom" (Krylov reduced order — per-step
+        cost independent of node count, the right call for big packages).
 
-        ``build_opts`` go to ``fidelity.build(pkg, "dss", ts=ts, ...)``;
-        remaining keywords are controller parameters (t_max, t_target, ...).
+        ``build_opts`` go to ``fidelity.build(pkg, fidelity, ts=ts,
+        ...)``; remaining keywords are controller parameters (t_max,
+        t_target, ...).
         """
         from .fidelity import build
-        dss = build(pkg, "dss", **{"ts": ts, **(build_opts or {})})
-        return cls(dss=dss, **control)
+        if fidelity not in ("dss", "rom"):
+            raise ValueError(
+                f"ThermalManager needs a state-space rung ('dss' or "
+                f"'rom'), got fidelity={fidelity!r}")
+        mdl = build(pkg, fidelity, **{"ts": ts, **(build_opts or {})})
+        return cls(dss=mdl, **control)
 
     def init_state(self) -> DTPMState:
         return DTPMState(theta=jnp.zeros((self.dss.n,), jnp.float32),
@@ -82,15 +97,32 @@ class ThermalManager:
         return bool(state.violations >= sustained)
 
     def run(self, powers_traj: jnp.ndarray):
-        """Roll the controller over a (T, S) power trace (jitted scan)."""
+        """Roll the controller over a (T, S) power trace (jitted scan).
 
-        @jax.jit
-        def go(traj):
-            def body(st, p):
-                st, info = self.update(st, p)
-                return st, (info["t_max"], info["throttle"])
+        The jitted closure is cached on the manager, KEYED on the
+        controller parameters and the model's operator arrays (they are
+        baked into the executable as compile-time constants), so
+        repeated runs over same-shaped traces reuse one XLA executable
+        while mutating t_max/t_target/..., swapping the model, or a
+        model regeneration still take effect. The cache holds STRONG
+        references to the keyed objects, so identity comparison cannot
+        be fooled by garbage-collected id reuse.
+        """
+        key = (self.t_max, self.t_target, self.down, self.up,
+               self.min_throttle, self.dss.t_ambient)
+        refs = (self.dss, self.dss.ad, self.dss.bd, self.dss.H)
+        cached = getattr(self, "_run_cache", None)
+        if cached is None or cached[0] != key or \
+                any(a is not b for a, b in zip(cached[1], refs)):
+            @jax.jit
+            def go(traj):
+                def body(st, p):
+                    st, info = self.update(st, p)
+                    return st, (info["t_max"], info["throttle"])
 
-            st, (tmax, thr) = jax.lax.scan(body, self.init_state(), traj)
-            return st, tmax, thr
+                st, (tmax, thr) = jax.lax.scan(body, self.init_state(),
+                                               traj)
+                return st, tmax, thr
 
-        return go(powers_traj)
+            self._run_cache = (key, refs, go)
+        return self._run_cache[2](powers_traj)

@@ -130,6 +130,31 @@ class PackageFamily:
         self.grid: NodeGrid = discretize(template)
         self.sym: SymbolicNetwork = symbolic_network(self.grid)
         self.coord_base, self.coord_jac = self._probe_affine_map()
+        self._template_net = None  # untuned template RCNetwork, cached
+
+    def template_network(self, cap_multipliers: Optional[dict] = None):
+        """The template's assembled :class:`~repro.core.rc_model.RCNetwork`
+        on the family's shared grid.
+
+        This is the anchor the batched models hang host-side one-time
+        work on: the RC family's template preconditioner factors its
+        ``-G``, and the ROM rung's Krylov basis is built from it
+        (``core/rom.py``) — one assembly either way, not one per
+        consumer: capacitance tuning only rescales ``C`` (G, the edge
+        pattern and P are untouched), so tuned variants are derived from
+        the single cached assembly with an O(N) scale.
+        """
+        from .rc_model import build_network  # lazy: avoids import cycle
+        if self._template_net is None:
+            self._template_net = build_network(self.template,
+                                               grid=self.grid)
+        net = self._template_net
+        if cap_multipliers:
+            c = net.C.copy()
+            for li, mult in cap_multipliers.items():
+                c = np.where(net.grid.layer == li, c * mult, c)
+            net = dataclasses.replace(net, C=c)
+        return net
 
     # ------------------------------------------------------------------
     # construction: sites, specs, probes

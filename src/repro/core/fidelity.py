@@ -9,7 +9,7 @@ This module makes that swap a string, at two levels:
 Level 1 — one concrete package (unchanged API)::
 
     from repro.core import build
-    sim = build(pkg, fidelity="rc")           # or "fvm", "dss",
+    sim = build(pkg, fidelity="rc")           # or "fvm", "dss", "rom",
                                               # "hotspot", "3dice", "pact"
     theta = sim.steady_state(q)               # fidelity-native state
     temps = sim.observe(theta)                # (n_obs,) absolute degC,
@@ -136,12 +136,14 @@ def evict_stale_jits(cache: Dict, prefix: str = "simulate",
 
 # Dense-vs-CG steady-solve crossover in NODES, measured by the
 # ``sparse_solver`` section of ``benchmarks/exec_time.py`` on this
-# container's CPU: the interpolated ``steady_crossover_nodes`` lands in
-# the ~0.7-1.5k range across runs (the two tiers are within noise of each
-# other at 564 nodes, dense is 4x behind by 2.1k and 20x behind by 8.2k),
-# so "auto" switches at the conservative top of that band — re-measure
-# when the hardware changes. ``solver="auto"`` picks CG at or above it.
-SOLVER_CROSSOVER_NODES = 1500
+# container's CPU (which emits a calibration WARNING whenever this
+# constant drifts >2x from the fresh measurement — the guard that keeps
+# "auto" honest across hardware and solver changes). With the
+# mixed-precision refined CG steady solve (f64 accuracy without x64) the
+# interpolated ``steady_crossover_nodes`` lands at ~2.0k: CG pays ~3
+# refinement passes, dense is 1.6x behind by 2.1k nodes and 6.6x behind
+# by 8.2k. ``solver="auto"`` picks CG at or above this.
+SOLVER_CROSSOVER_NODES = 2000
 
 _SOLVERS = ("dense", "cg", "auto")
 
@@ -180,7 +182,7 @@ def register_family_fidelity(name: str):
 
 def _ensure_registered() -> None:
     # Registration happens as an import side effect of each model module.
-    from . import baselines, dss, fvm_ref, rc_model  # noqa: F401
+    from . import baselines, dss, fvm_ref, rc_model, rom  # noqa: F401
 
 
 def available_fidelities() -> Tuple[str, ...]:

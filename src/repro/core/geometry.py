@@ -311,6 +311,21 @@ def make_3d_package(n_stacks: int = 16, tiers: int = 3,
                    H_PASSIVE, t_ambient)
 
 
+def package_from_name(system: str):
+    """Parse a Table-6 system string — ``"2p5d_N"`` or ``"3d_SxT"`` —
+    into ``(Package, n_sources)``.
+
+    THE shared parser of the naming scheme used across benchmarks,
+    tests and BENCH artifacts (the inverse of the ``Package.name``
+    written by :func:`make_2p5d_package` / :func:`make_3d_package`).
+    """
+    if system.startswith("3d"):
+        stacks, tiers = map(int, system[3:].split("x"))
+        return make_3d_package(stacks, tiers=tiers), stacks * tiers
+    n = int(system.split("_")[1])
+    return make_2p5d_package(n), n
+
+
 def make_tpu_tray_package(n_chips: int = 4, chip_side: float = 15e-3,
                           board_side: float = 90e-3,
                           htc_top: float = 18000.0,

@@ -65,6 +65,30 @@ class RCNetwork:
         G[np.arange(n), np.arange(n)] = -(G.sum(axis=1) + self.gconv)
         return G
 
+    def neg_g_diag(self) -> np.ndarray:
+        """Diagonal of -G (host f64): off-diagonal row sums + convection.
+
+        THE host-side -G convention: every matrix-free consumer (the
+        refined steady solve, the ROM basis/projection) derives its
+        diagonal here so a change to the assembly stays in one place.
+        """
+        return np.bincount(self.rows, weights=self.gvals,
+                           minlength=self.n) + self.gconv
+
+    def neg_g_matvec(self, x: np.ndarray) -> np.ndarray:
+        """(-G) @ x on the host (f64, O(E n_cols)); x is (N,) or (N, k)."""
+        x = np.asarray(x, np.float64)
+        d = self.neg_g_diag()
+        if x.ndim == 1:
+            y = d * x
+            contrib = self.gvals * x[self.cols]
+        else:
+            y = d[:, None] * x
+            contrib = self.gvals[:, None] * x[self.cols]
+        if self.rows.size:
+            np.subtract.at(y, self.rows, contrib)
+        return y
+
 
 def _lateral_gvals(grid: NodeGrid, i: np.ndarray, j: np.ndarray,
                    axis: str) -> np.ndarray:
@@ -217,7 +241,11 @@ class ThermalRCModel:
                   state is Jacobi-preconditioned CG on the O(E) COO
                   matvec kernel (``kernels/coo_matvec``), and dense
                   integrators map to their matrix-free twin
-                  (be_chol/be_lu -> be_cg, trap -> trap_cg).
+                  (be_chol/be_lu -> be_cg, trap -> trap_cg). On f32
+                  models the steady solve is wrapped in a mixed-precision
+                  iterative-refinement loop (f64 host residuals, f32
+                  device corrections) reaching f64-dense agreement
+                  without JAX_ENABLE_X64; opt out with refine_passes=0.
       'auto'    — 'cg' at or above the measured crossover node count
                   (``fidelity.SOLVER_CROSSOVER_NODES``), else 'dense'.
     """
@@ -227,7 +255,8 @@ class ThermalRCModel:
     def __init__(self, net: RCNetwork, dtype=jnp.float32,
                  method: str = "be_chol", solver: str = "dense",
                  cg_tol: Optional[float] = None, cg_maxiter: int = 1000,
-                 matvec_backend: str = "auto"):
+                 matvec_backend: str = "auto",
+                 refine_rtol: float = 1e-9, refine_passes: int = 4):
         self.net = net
         self.dtype = dtype
         self.solver = resolve_solver(solver, net.n)
@@ -237,7 +266,8 @@ class ThermalRCModel:
         self.source_names = list(net.grid.source_names)
         self.C = jnp.asarray(net.C, dtype)
         self.P = jnp.asarray(net.P, dtype)
-        self.H = jnp.asarray(observation_matrix(net, self.tags), dtype)
+        self._h64 = observation_matrix(net, self.tags)  # host f64
+        self.H = jnp.asarray(self._h64, dtype)
         self.t_ambient = net.t_ambient
         # COO pattern + values for the matrix-free path (always kept:
         # O(E), and the be_cg/trap_cg integrators are method-selectable
@@ -245,14 +275,15 @@ class ThermalRCModel:
         self._plan = coo_plan(net.rows, net.cols, net.n)
         self._backend = matvec_backend
         self._gvals = jnp.asarray(net.gvals, dtype)
-        self._gdiag = jnp.asarray(
-            -(np.bincount(net.rows, weights=net.gvals,
-                          minlength=net.n) + net.gconv), dtype)
+        self._gdiag = jnp.asarray(-net.neg_g_diag(), dtype)
         # steady-solve CG controls; f32 runs to its residual floor, so the
         # default tolerance is tier-appropriate rather than aspirational
         self.cg_tol = cg_tol if cg_tol is not None else \
             (1e-11 if dtype == jnp.float64 else 1e-5)
         self.cg_maxiter = cg_maxiter
+        # mixed-precision iterative-refinement controls (f32 cg steady)
+        self.refine_rtol = refine_rtol
+        self.refine_passes = refine_passes
         self._G = None  # dense G, built lazily (never on the cg tier)
 
     @property
@@ -269,23 +300,34 @@ class ThermalRCModel:
                          backend=self._backend)
         return off + self._gdiag * theta
 
-    def make_steady_solver(self):
-        """Standalone matrix-free steady solve ``q_src -> theta``.
+    def make_steady_solver(self, refine: Optional[bool] = None):
+        """Standalone matrix-free steady solve ``q_src -> theta``
+        (ready to call; the device part is jitted internally).
 
-        The closure captures only O(E) arrays (plan, COO values, diagonal,
-        P) — NOT the model — so long-lived consumers (e.g. a DSS model on
-        the cg tier) can keep it without pinning a dense G or the parent
-        model. Solves (-G) theta = P q by Jacobi-preconditioned CG on the
-        COO matvec kernel.
+        Neither path pins the model or a dense N x N matrix: the
+        unrefined closure captures only O(E) device arrays (plan, COO
+        values, diagonal, P), and the refined path additionally holds
+        the host :class:`RCNetwork` (O(E)+O(N) numpy arrays, incl. its
+        grid) for the f64 residual matvec — so long-lived consumers
+        (e.g. a DSS model on the cg tier) can keep it cheaply. Solves
+        (-G) theta = P q by Jacobi-preconditioned CG on the COO matvec
+        kernel.
+
+        ``refine`` (default: on unless the model already runs in float64)
+        wraps the CG in a mixed-precision ITERATIVE-REFINEMENT outer
+        loop: residuals and the solution accumulate in float64 on the
+        host (an O(E) numpy matvec), correction solves run the f32 device
+        CG. The refined solve returns a float64 numpy theta that agrees
+        with the f64 dense tier to <=1e-6 degC WITHOUT ``JAX_ENABLE_X64``
+        — ``observe`` keeps such states on the host f64 path end to end.
         """
         plan, gvals, gdiag = self._plan, self._gvals, self._gdiag
-        p_mat, dtype, backend = self.P, self.dtype, self._backend
+        dtype, backend = self.dtype, self._backend
         tol, maxiter = self.cg_tol, self.cg_maxiter
         neg_diag = -gdiag
 
-        def steady(q_src):
-            rhs = p_mat @ jnp.asarray(q_src, dtype)
-
+        @jax.jit
+        def solve_dev(rhs):  # (-G) x = rhs by Jacobi-PCG, device dtype
             def mv(x):
                 return neg_diag * x - coo_matvec(plan, gvals, x,
                                                  backend=backend)
@@ -295,20 +337,60 @@ class ThermalRCModel:
                 M=lambda x: x / neg_diag)
             return sol
 
+        p_dev = self.P
+
+        @jax.jit
+        def steady_dev(q_src):
+            return solve_dev(p_dev @ jnp.asarray(q_src, dtype))
+
+        if refine is None:  # refine_passes=0 opts out of refinement
+            refine = dtype != jnp.float64 and self.refine_passes > 0
+        if not refine:
+            return steady_dev
+
+        # host float64 side: residuals via the network's O(E) COO matvec
+        net = self.net
+        p64 = net.P
+        # an EXPLICIT refine=True overrides refine_passes=0 (which would
+        # otherwise return the zero initial guess unsolved)
+        rtol = self.refine_rtol
+        max_passes = max(self.refine_passes, 1)
+
+        def steady(q_src):
+            rhs = p64 @ np.asarray(q_src, np.float64)
+            bnorm = np.linalg.norm(rhs) or 1.0
+            x = np.zeros(net.n)
+            for _ in range(max_passes):
+                res = rhs - net.neg_g_matvec(x)
+                if np.linalg.norm(res) <= rtol * bnorm:
+                    break
+                x = x + np.asarray(solve_dev(jnp.asarray(res, dtype)),
+                                   np.float64)
+            return x
+
         return steady
 
-    def steady_state(self, q_src) -> jnp.ndarray:
+    def steady_state(self, q_src):
         """Steady theta: solve -G theta = P q (dense or matrix-free CG,
-        by solver tier)."""
+        by solver tier). On the f32 cg tier the solve is refined to f64
+        accuracy (see :meth:`make_steady_solver`) and returned as a host
+        float64 array."""
         if self.solver == "cg":
             if not hasattr(self, "_steady_fn"):
-                self._steady_fn = jax.jit(self.make_steady_solver())
+                self._steady_fn = self.make_steady_solver()
             return self._steady_fn(q_src)
         rhs = self.P @ jnp.asarray(q_src, self.dtype)
         return jnp.linalg.solve(-self.G, rhs)
 
     def observe(self, theta) -> jnp.ndarray:
-        """Absolute temperature at the observation tags (self.tags order)."""
+        """Absolute temperature at the observation tags (self.tags order).
+
+        Host-float64 states (from the refined cg steady solve) stay on
+        the host f64 observation operator, so the <=1e-6 degC agreement
+        with the f64 dense tier survives observation without x64.
+        """
+        if isinstance(theta, np.ndarray) and theta.dtype == np.float64:
+            return self._h64 @ theta + self.t_ambient
         return self.H @ theta + self.t_ambient
 
     def make_stepper(self, dt: float, method: Optional[str] = None):
@@ -465,18 +547,22 @@ def _resolve_cap_multipliers(pkg: Package,
 def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
                 dtype=jnp.float32, method: str = "be_chol",
                 solver: str = "dense", cg_tol: Optional[float] = None,
-                cg_maxiter: int = 1000,
+                cg_maxiter: int = 1000, refine_rtol: float = 1e-9,
+                refine_passes: int = 4,
                 grid: Optional[NodeGrid] = None) -> ThermalRCModel:
     """Registry builder. ``cap_multipliers=None`` applies the tuned
     per-layer defaults for the package's layer stack (override with an
     explicit dict, or pass ``{}`` for the untuned network). ``solver``
-    selects the solver tier (see :class:`ThermalRCModel`)."""
+    selects the solver tier and ``refine_rtol``/``refine_passes`` the
+    mixed-precision refinement of its f32 cg steady solve
+    (``refine_passes=0`` opts out; see :class:`ThermalRCModel`)."""
     return ThermalRCModel(
         build_network(pkg, grid=grid,
                       cap_multipliers=_resolve_cap_multipliers(
                           pkg, cap_multipliers)),
         dtype=dtype, method=method, solver=solver, cg_tol=cg_tol,
-        cg_maxiter=cg_maxiter)
+        cg_maxiter=cg_maxiter, refine_rtol=refine_rtol,
+        refine_passes=refine_passes)
 
 
 # ---------------------------------------------------------------------------
@@ -574,11 +660,20 @@ class RCFamilyModel:
         self._slots = family.scalar_slots
         self._htc_bottom = family.template.htc_bottom
         self.t_ambient = family.template.t_ambient  # template value
-        # template preconditioner: factor -G(p0) once on the host (f64)
-        net0 = build_network(family.template, grid=family.grid)
-        self._chol0 = jnp.asarray(np.linalg.cholesky(-net0.g_dense()),
-                                  dtype)
+        self._chol0_cache = None
         self._jits: dict = {}
+
+    @property
+    def _chol0(self) -> jnp.ndarray:
+        """Template preconditioner: -G(p0) Cholesky-factored once on the
+        host (f64) — lazily, so consumers that never touch the batched
+        steady solve (e.g. the ROM family riding only ``reduced_ops``)
+        skip the O(N^3) factorization entirely."""
+        if self._chol0_cache is None:
+            net0 = self.family.template_network()
+            self._chol0_cache = jnp.asarray(
+                np.linalg.cholesky(-net0.g_dense()), self.dtype)
+        return self._chol0_cache
 
     @property
     def n(self) -> int:
@@ -603,6 +698,28 @@ class RCFamilyModel:
         vals["t_ambient"] = self._scalar(p, "t_ambient")
         vals["power_scale"] = self._scalar(p, "power_scale")
         return vals
+
+    def reduced_ops(self, p, v_basis):
+        """Basis-projection hook (the ROM rung, ``core/rom.py``): reduced
+        ``(Ghat, Chat, Phat, Hhat, t_ambient, power_scale)`` for ONE
+        parameter vector over a fixed (N, r) basis.
+
+        Pure jax and vmappable: ``G(p) V`` is the O(E r) COO segment-sum
+        matvec over the basis columns (batch on the kernel's leading
+        axis, no dense G), everything else is a GEMM against ``v_basis``.
+        """
+        v = self._network(p)
+        num = self.num
+        neg_diag = num.neg_g_diag(v["gvals"], v["gconv"])
+        gv_t = coo_matvec(num.plan, v["gvals"], v_basis.T,
+                          backend=num.matvec_backend) \
+            - neg_diag * v_basis.T            # (r, N) rows = (G v_k)'
+        ghat = gv_t @ v_basis
+        ghat = 0.5 * (ghat + ghat.T)
+        chat = (v_basis.T * v["C"]) @ v_basis
+        chat = 0.5 * (chat + chat.T)
+        return (ghat, chat, v_basis.T @ v["P"], v["H"] @ v_basis,
+                v["t_ambient"], v["power_scale"])
 
     # -- batched steady state ------------------------------------------------
     def _pcg(self, gvals, gconv, rhs):

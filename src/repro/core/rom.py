@@ -1,0 +1,486 @@
+"""ROM fidelity rung: Krylov moment-matching projection of the RC network.
+
+The fastest transient paths in the ladder still scale with node count —
+per-step cost of the dense BE tier is O(N^2) (triangular solves) and the
+matrix-free CG tier pays O(E * iters) per step. This module adds the
+standard escape hatch of the thermal-simulation literature (3D-ICE 4.0's
+MOR mode, PRIMA-class RC macromodels): project the continuous-time LTI
+system
+
+    C theta_dot = G theta + P q,    y = H theta + t_amb
+
+onto an r-dimensional block-Krylov subspace spanning the first ``m`` block
+moments of the transfer function around s = 0,
+
+    span{ (-G)^-1 P, [(-G)^-1 C] (-G)^-1 P, ..., [(-G)^-1 C]^(m-1) (-G)^-1 P },
+
+giving the reduced system ``(Ghat, Chat, Phat, Hhat) = (V' G V, V' C V,
+V' P, H V)`` whose steady solves and exact-ZOH transient steps are dense
+r x r operations — INDEPENDENT of the node count N. Because G is
+symmetric negative definite and C diagonal positive, the congruence
+projection preserves definiteness for any full-rank V (PRIMA's
+stability/passivity argument); the basis is additionally C-orthonormalized
+(``V' C V = I`` up to roundoff), which keeps the block Arnoldi recursion
+well conditioned and makes the reduced pencil symmetric.
+
+Basis construction is a one-time cost per package. On the ``"dense"``
+solver tier the inner solves ``(-G)^-1 B`` reuse one host Cholesky
+factorization; on the ``"cg"`` tier (``"auto"`` above the measured
+crossover) they run a matrix-free f64 block CG on the O(E)
+``kernels/coo_matvec`` segment-sum kernel — G is never materialized even
+at 8k+ nodes. The reduced system is then sampled with the SAME exact-ZOH
+discretization as the full-order DSS rung
+(:func:`~repro.core.dss.zoh_discretize`, fed the r x r pencil), so
+``build(pkg, "rom")`` exposes the full ``ThermalSimulator`` protocol and
+drops into every DSS consumer, including the runtime
+:class:`~repro.core.dtpm.ThermalManager`.
+
+Accuracy knob: ``n_moments`` (default 6: <=0.03 degC max observation
+error vs the full DSS on the Table-6 WL1 traces, ~0.04 at 5, ~0.12 at 4)
+or an explicit dimension ``r`` that truncates the dominant-ordered basis.
+Each block moment adds up to S columns (S = number of sources), so the
+default lands at r = 6 S << N.
+
+Batched design spaces: :class:`ROMFamilyModel` (``build_family(fam,
+"rom")``) builds ONE basis from the family's template and evaluates the
+reduced ``params -> (Ghat, Chat, Phat, Hhat)`` projection inside the
+traced numeric phase (the ``reduced_ops`` basis-projection hook of
+``RCFamilyModel``), turning the family transient's per-candidate CG
+iterations into batched r x r GEMMs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.coo_matvec.ops import coo_matvec, coo_plan
+from .dss import family_zoh_simulate, zoh_discretize
+from .fidelity import (evict_stale_jits, register_family_fidelity,
+                       register_fidelity, resolve_solver)
+from .geometry import NodeGrid, Package
+from .rc_model import (RCFamilyModel, RCNetwork, _batched_pcg,
+                       _resolve_cap_multipliers, build_network,
+                       observation_matrix)
+
+# default number of block moments matched around s=0; calibrated against
+# the full DSS on the Table-6 WL1 traces (see module docstring)
+DEFAULT_MOMENTS = 6
+
+# relative C-norm drop tolerance for deflating (near-)dependent block
+# columns during orthonormalization
+_DROP_TOL = 1e-8
+
+
+def _make_neg_g_solver(net: RCNetwork, solver: str,
+                       cg_tol: float = 1e-10, cg_maxiter: int = 5000,
+                       matvec_backend: str = "auto"):
+    """Block solver ``B (N, k) -> (-G)^-1 B`` in float64 (host in/out).
+
+    "dense": one host Cholesky of -G, reused for every block.
+    "cg": matrix-free Jacobi-preconditioned block CG on the O(E) COO
+    segment-sum kernel — the dense G is never formed. Runs in f64 on
+    device (the one-time construction wraps itself in ``enable_x64``;
+    runtime never needs it).
+    """
+    if solver == "dense":
+        import scipy.linalg as sla
+        cho = sla.cho_factor(-net.g_dense())
+        return lambda b: sla.cho_solve(cho, b)
+
+    neg_diag = net.neg_g_diag()
+    with jax.experimental.enable_x64():
+        plan = coo_plan(net.rows, net.cols, net.n)
+        gvals = jnp.asarray(net.gvals, jnp.float64)
+        diag = jnp.asarray(neg_diag, jnp.float64)
+
+        def mv(x):  # x (k, N) -> (-G) x rows
+            return diag * x - coo_matvec(plan, gvals, x,
+                                         backend=matvec_backend)
+
+        @jax.jit
+        def solve(rhs):  # (k, N)
+            return _batched_pcg(mv, lambda r: r / diag, rhs,
+                                jnp.zeros_like(rhs), cg_tol, cg_maxiter)
+
+    def solve_block(b):
+        with jax.experimental.enable_x64():
+            out = solve(jnp.asarray(np.ascontiguousarray(b.T)))
+            return np.asarray(out, np.float64).T
+
+    return solve_block
+
+
+def krylov_basis(net: RCNetwork, r: Optional[int] = None,
+                 n_moments: int = DEFAULT_MOMENTS, solver: str = "auto",
+                 drop_tol: float = _DROP_TOL, cg_tol: float = 1e-10,
+                 cg_maxiter: int = 5000) -> np.ndarray:
+    """C-orthonormal block-Krylov basis V (N, r) matching block moments
+    of ``H (sC - G)^-1 P`` around s = 0 (PRIMA-style, host float64).
+
+    Block Arnoldi with full reorthogonalization: each block is
+    C-orthogonalized against the accepted basis (twice), then
+    rank-revealed in the C inner product (eigendecomposition of its
+    C-Gram matrix) so dependent directions deflate and the kept columns
+    are ordered by dominance — an explicit ``r`` truncates to the leading
+    directions and keeps generating moments until ``r`` columns exist (or
+    the recursion deflates to nothing). ``r=None`` keeps every
+    independent column of ``n_moments`` blocks, i.e. r <= n_moments * S.
+
+    ``solver`` is the solver-tier knob for the inner ``(-G)^-1`` block
+    solves (resolved against the node count as everywhere else).
+    """
+    n = net.n
+    solver = resolve_solver(solver, n)
+    solve_block = _make_neg_g_solver(net, solver, cg_tol=cg_tol,
+                                     cg_maxiter=cg_maxiter)
+    c_diag = np.asarray(net.C, np.float64)
+    r_cap = n if r is None else min(int(r), n)
+    if r is not None and r_cap < 1:
+        raise ValueError(f"r must be >= 1, got {r}")
+    max_blocks = n_moments if r is None else max(n_moments, n)
+
+    v_basis = np.zeros((n, 0))
+    block = solve_block(np.asarray(net.P, np.float64))
+    for blk in range(max_blocks):
+        # deflation reference: the block's PRE-orthogonalization column
+        # C-norms — once the recursion exhausts the reachable subspace,
+        # the orthogonalized residual is pure roundoff relative to THIS
+        # scale (judging against the residual's own largest eigenvalue
+        # would keep amplified noise columns and break C-orthonormality)
+        col_sq = np.einsum("ij,ij->j", block, c_diag[:, None] * block)
+        scale_pre = float(col_sq.max()) if col_sq.size else 0.0
+        if scale_pre <= 0.0:
+            break                            # empty block (no sources)
+        for _ in range(2):  # MGS reorthogonalization against the basis
+            if v_basis.shape[1]:
+                block = block - v_basis @ (v_basis.T
+                                           @ (c_diag[:, None] * block))
+        gram = block.T @ (c_diag[:, None] * block)
+        gram = 0.5 * (gram + gram.T)
+        w, u = np.linalg.eigh(gram)
+        w, u = w[::-1], u[:, ::-1]          # dominant directions first
+        keep = w > scale_pre * drop_tol ** 2
+        if not keep.any():
+            break                            # block fully deflated
+        new = block @ (u[:, keep] / np.sqrt(w[keep]))
+        new = new[:, :r_cap - v_basis.shape[1]]
+        v_basis = np.hstack([v_basis, new])
+        if v_basis.shape[1] >= r_cap or blk == max_blocks - 1:
+            break                            # don't pay an unused solve
+        block = solve_block(c_diag[:, None] * new)
+    if v_basis.shape[1] == 0:
+        raise ValueError("Krylov recursion produced an empty basis "
+                         "(no sources?)")
+    return v_basis
+
+
+def project_network(net: RCNetwork, v_basis: np.ndarray,
+                    tags: Optional[list] = None):
+    """Reduced operators ``(Ghat, Chat, Phat, Hhat)`` for one network
+    over a fixed basis (host float64, matrix-free in G: the product
+    ``G V`` is an O(E r) COO accumulation, never a dense N x N matrix).
+    """
+    v64 = np.asarray(v_basis, np.float64)
+    gv = -net.neg_g_matvec(v64)        # G V, O(E r), no dense G
+    ghat = v64.T @ gv
+    ghat = 0.5 * (ghat + ghat.T)             # V' G V of symmetric G
+    chat = v64.T @ (net.C[:, None] * v64)
+    chat = 0.5 * (chat + chat.T)
+    phat = v64.T @ net.P
+    hhat = observation_matrix(net, tags) @ v64
+    return ghat, chat, phat, hhat
+
+
+class ROMModel:
+    """Reduced-order thermal model: the ``"rom"`` rung of the ladder.
+
+    Holds the reduced ``(Ghat, Chat, Phat, Hhat)`` system (host float64)
+    and the exact-ZOH discrete step ``(ad, bd)`` at the built sampling
+    period (:func:`~repro.core.dss.zoh_discretize` of the r x r reduced
+    pencil) — one r x r GEMM per transient sample, independent of the
+    node count. Rollouts are dtype-faithful jitted scans (the reduced
+    GEMVs are too small to benefit from the f32 ``dss_step`` kernel, and
+    staying in the requested dtype keeps the f64 validation path exact);
+    regeneration at another dt is an r x r ``expm`` — microseconds. The
+    model exposes ``ad``/``bd``/``H``/``t_ambient``/``n`` so it drops
+    into every DSS consumer (notably the runtime ``ThermalManager``).
+
+    State is the reduced coordinate vector ``theta_hat (r,)``;
+    ``expand(theta_hat)`` recovers the full N-node theta for heat maps or
+    debugging.
+    """
+
+    fidelity = "rom"
+
+    def __init__(self, net: RCNetwork, v_basis: np.ndarray,
+                 ts: float = 0.01, dtype=jnp.float32):
+        import scipy.linalg as sla
+        if v_basis.ndim != 2 or v_basis.shape[0] != net.n:
+            raise ValueError(f"basis must be (N={net.n}, r), got "
+                             f"{v_basis.shape}")
+        self.net = net
+        self.V = np.asarray(v_basis, np.float64)
+        self.dtype = dtype
+        self.ts = ts
+        self.tags = sorted({t for t in net.grid.tags if t})
+        self.source_names = list(net.grid.source_names)
+        self.t_ambient = net.t_ambient
+        self.ghat, self.chat, self.phat, self.hhat = \
+            project_network(net, self.V, self.tags)
+        # reduced continuous-time pencil, kept (host f64, r x r) for
+        # regeneration at any sampling period
+        self._a = np.linalg.solve(self.chat, self.ghat)
+        self._b = np.linalg.solve(self.chat, self.phat)
+        self.H = jnp.asarray(self.hhat, dtype)
+        self._zoh_cache: dict = {}
+        self.ad, self.bd = self._zoh(ts)
+        self._cho = sla.cho_factor(-self.ghat)
+        self._cho_solve = sla.cho_solve
+        self._jits: dict = {}
+
+    # -- dimensions ---------------------------------------------------------
+    @property
+    def r(self) -> int:
+        return int(self.V.shape[1])
+
+    @property
+    def n(self) -> int:
+        """State dimension (r) — the DSS-consumer contract."""
+        return self.r
+
+    @property
+    def n_full(self) -> int:
+        """Node count of the projected network."""
+        return int(self.net.n)
+
+    @property
+    def reduction_ratio(self) -> float:
+        return self.n_full / self.r
+
+    # -- ZOH regeneration ----------------------------------------------------
+    def _zoh(self, dt: float):
+        """(ad, bd) at sampling period dt (cached; r x r expm to miss)."""
+        key = round(float(dt), 12)
+        if key not in self._zoh_cache:
+            if len(self._zoh_cache) >= 8:  # bound long-lived processes
+                self._zoh_cache.pop(next(iter(self._zoh_cache)))
+            ad, bd = zoh_discretize(self._a, self._b, dt)
+            self._zoh_cache[key] = (jnp.asarray(ad, self.dtype),
+                                    jnp.asarray(bd, self.dtype))
+        return self._zoh_cache[key]
+
+    # -- ThermalSimulator protocol ------------------------------------------
+    def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
+        shape = (self.r,) if batch is None else (batch, self.r)
+        return jnp.zeros(shape, self.dtype)
+
+    def steady_state(self, q_src) -> jnp.ndarray:
+        """Reduced steady state: solve ``-Ghat theta_hat = Phat q`` with
+        the prefactored r x r Cholesky (host float64)."""
+        rhs = self.phat @ np.asarray(q_src, np.float64)
+        return jnp.asarray(self._cho_solve(self._cho, rhs), self.dtype)
+
+    def observe(self, theta_hat) -> jnp.ndarray:
+        """Absolute temperature at the observation tags (self.tags order)."""
+        return self.H @ theta_hat + self.t_ambient
+
+    def make_simulator(self, dt: Optional[float] = None):
+        """Jitted ``simulate(theta_hat0, q_traj[T,S]) -> (T, n_obs)``; a
+        ``dt`` other than the built ``ts`` regenerates the r x r ZOH from
+        the reduced continuous-time system (microseconds)."""
+        dt = self.ts if dt is None else float(dt)
+        key = ("simulate", round(dt, 12))
+        if key not in self._jits:
+            evict_stale_jits(self._jits)
+            ad, bd = self._zoh(dt)
+            h, t_amb, dtype = self.H, self.t_ambient, self.dtype
+
+            @jax.jit
+            def simulate(theta0, q_traj):
+                def body(th, qt):
+                    th = ad @ th + bd @ qt.astype(th.dtype)
+                    return th, h @ th
+
+                _, obs = jax.lax.scan(body, theta0.astype(dtype), q_traj)
+                return obs + t_amb
+
+            self._jits[key] = simulate
+        return self._jits[key]
+
+    def simulate_batch(self, theta0, q_traj,
+                       dt: Optional[float] = None) -> jnp.ndarray:
+        """Batched rollout: theta0 (B, r), q_traj (T, B, S) ->
+        (T, B, n_obs) — one fused r x r GEMM per step for the batch."""
+        dt = self.ts if dt is None else float(dt)
+        key = ("simulate_batch", round(dt, 12))
+        if key not in self._jits:
+            evict_stale_jits(self._jits, prefix="simulate_batch")
+            ad, bd = self._zoh(dt)
+            h, t_amb, dtype = self.H, self.t_ambient, self.dtype
+
+            @jax.jit
+            def simulate(theta0, q_traj):
+                def body(th, qt):  # th (B, r), qt (B, S)
+                    th = th @ ad.T + qt.astype(th.dtype) @ bd.T
+                    return th, th @ h.T
+
+                _, obs = jax.lax.scan(body, theta0.astype(dtype), q_traj)
+                return obs + t_amb
+
+            self._jits[key] = simulate
+        return self._jits[key](theta0, q_traj)
+
+    # -- full-state recovery ------------------------------------------------
+    def expand(self, theta_hat) -> np.ndarray:
+        """Lift a reduced state back to the N-node theta (host f64)."""
+        return self.V @ np.asarray(theta_hat, np.float64)
+
+
+@register_fidelity("rom")
+def build_rom(pkg: Package, r: Optional[int] = None,
+              n_moments: int = DEFAULT_MOMENTS, ts: float = 0.01,
+              solver: str = "auto", dtype=jnp.float32,
+              cap_multipliers: Optional[dict] = None,
+              basis: Optional[np.ndarray] = None,
+              cg_tol: float = 1e-10, cg_maxiter: int = 5000,
+              grid: Optional[NodeGrid] = None) -> ROMModel:
+    """Registry builder: package -> RC network -> Krylov basis -> ROM.
+
+    ``r`` / ``n_moments`` are the accuracy knobs (see module docstring);
+    ``solver`` picks the tier for the one-time basis solves ("auto"
+    resolves against the node count, so 8k+-node packages build the basis
+    matrix-free). ``basis`` injects a precomputed (N, r) basis — the hook
+    the family path and cross-validation tests use to share one basis
+    across candidates.
+    """
+    net = build_network(pkg, grid=grid,
+                        cap_multipliers=_resolve_cap_multipliers(
+                            pkg, cap_multipliers))
+    if basis is None:
+        basis = krylov_basis(net, r=r, n_moments=n_moments, solver=solver,
+                             cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+    return ROMModel(net, basis, ts=ts, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Batched design-space model: one template basis, many reduced systems
+# ---------------------------------------------------------------------------
+class ROMFamilyModel:
+    """ROM over a ``PackageFamily``: ONE template Krylov basis, a traced
+    reduced assembly per candidate.
+
+    The basis is built once from the family's template network (the same
+    matrix-free construction as the single-package path); every batched
+    call then evaluates ``params -> (Ghat, Chat, Phat, Hhat)`` through
+    ``RCFamilyModel.reduced_ops`` — an O(E r) COO projection inside the
+    traced numeric phase — and solves/steps in the reduced space. The
+    family transient is an exact ZOH per candidate (vmapped r x r expm,
+    amortized over all steps) whose rollout is batched r x r GEMMs: no
+    per-candidate CG iteration, no N x N factorization.
+    """
+
+    fidelity = "rom"
+
+    def __init__(self, family, r: Optional[int] = None,
+                 n_moments: int = DEFAULT_MOMENTS, ts: float = 0.01,
+                 cap_multipliers: Optional[dict] = None,
+                 dtype=jnp.float32, basis: Optional[np.ndarray] = None,
+                 solver: str = "auto", cg_tol: float = 1e-10,
+                 cg_maxiter: int = 5000, **rc_opts):
+        self.rcf = RCFamilyModel(family, cap_multipliers=cap_multipliers,
+                                 dtype=dtype, **rc_opts)
+        self.family = family
+        self.ts = ts
+        self.dtype = dtype
+        self.tags = self.rcf.tags
+        self.source_names = self.rcf.source_names
+        self.param_names = self.rcf.param_names
+        if basis is None:
+            net0 = family.template_network(
+                _resolve_cap_multipliers(family.template, cap_multipliers))
+            # cg_tol/cg_maxiter govern the one-time basis solves, exactly
+            # as on the single-package build(pkg, "rom", ...) path
+            basis = krylov_basis(net0, r=r, n_moments=n_moments,
+                                 solver=solver, cg_tol=cg_tol,
+                                 cg_maxiter=cg_maxiter)
+        self.V = np.asarray(basis, np.float64)
+        self._vd = jnp.asarray(self.V, dtype)
+        self._jits: dict = {}
+
+    @property
+    def r(self) -> int:
+        return int(self.V.shape[1])
+
+    @property
+    def n_full(self) -> int:
+        return self.rcf.n
+
+    def _reduced(self, p):
+        """Traced per-candidate reduced system (vmap me)."""
+        return self.rcf.reduced_ops(p, self._vd)
+
+    def steady_state_batch(self, params, q_src) -> jnp.ndarray:
+        """params (B, P), q_src (B, S) -> reduced steady states (B, r)."""
+        if "steady" not in self._jits:
+            def _steady(params, q):
+                ghat, _, phat, _, _, scale = jax.vmap(self._reduced)(params)
+                rhs = jnp.einsum("brs,bs->br", phat,
+                                 q.astype(self.dtype) * scale[:, None])
+                return jnp.linalg.solve(-ghat, rhs[..., None])[..., 0]
+
+            self._jits["steady"] = jax.jit(_steady)
+        return self._jits["steady"](jnp.asarray(params, self.dtype),
+                                    jnp.asarray(q_src, self.dtype))
+
+    def observe_batch(self, theta_hat, params) -> jnp.ndarray:
+        """theta_hat (B, r), params (B, P) -> absolute degC (B, n_obs)."""
+        if "observe" not in self._jits:
+            def _observe(theta_hat, params):
+                def one(th, p):
+                    # XLA dead-code-eliminates the unused reduced blocks
+                    _, _, _, hhat, t_amb, _ = self._reduced(p)
+                    return hhat @ th + t_amb
+
+                return jax.vmap(one)(theta_hat, params)
+
+            self._jits["observe"] = jax.jit(_observe)
+        return self._jits["observe"](theta_hat,
+                                     jnp.asarray(params, self.dtype))
+
+    def simulate_family(self, params, q_traj,
+                        dt: Optional[float] = None) -> jnp.ndarray:
+        """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs).
+
+        Exact ZOH per candidate: one vmapped r x r ``expm`` amortized
+        over all T steps, then batched r x r GEMMs per step.
+        """
+        dt = self.ts if dt is None else float(dt)
+        key = ("simulate", round(dt, 12))  # match the _zoh cache keying
+        if key not in self._jits:
+            evict_stale_jits(self._jits)
+
+            def discretize_one(p):
+                ghat, chat, phat, hhat, t_amb, scale = self._reduced(p)
+                a = jnp.linalg.solve(chat, ghat)
+                ad = jax.scipy.linalg.expm(a * dt)
+                eye = jnp.eye(a.shape[0], dtype=a.dtype)
+                bd = jnp.linalg.solve(a, ad - eye) \
+                    @ jnp.linalg.solve(chat, phat)
+                return ad, bd, hhat, t_amb, scale
+
+            self._jits[key] = jax.jit(family_zoh_simulate(
+                discretize_one, self.r, self.dtype))
+        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+
+
+@register_family_fidelity("rom")
+def build_rom_family(family, r: Optional[int] = None,
+                     n_moments: int = DEFAULT_MOMENTS, ts: float = 0.01,
+                     cap_multipliers=None, dtype=jnp.float32,
+                     **opts) -> ROMFamilyModel:
+    return ROMFamilyModel(family, r=r, n_moments=n_moments, ts=ts,
+                          cap_multipliers=cap_multipliers, dtype=dtype,
+                          **opts)

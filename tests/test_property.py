@@ -10,8 +10,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (ThermalRCModel, build_network, discretize_rc,
-                        make_2p5d_package, make_3d_package,
-                        spectral_radius)
+                        krylov_basis, make_2p5d_package, make_3d_package,
+                        project_network, spectral_radius)
 from repro.kernels.flash_attn.ref import gqa_ref
 from repro.models.layers import apply_rope
 
@@ -65,6 +65,21 @@ def test_neg_g_spd_after_assembly(pkg):
     neg_g = -net.g_dense()
     np.testing.assert_allclose(neg_g, neg_g.T, rtol=1e-9)
     np.linalg.cholesky(neg_g)  # raises LinAlgError unless SPD
+
+
+@given(packages(), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_rom_reduced_g_stays_spd(pkg, n_moments):
+    """The Krylov congruence projection preserves definiteness on any
+    generated geometry: -Ghat = -V' G V stays SPD and Chat = V' C V stays
+    the identity (C-orthonormal basis) — the PRIMA stability property the
+    ROM rung's prefactored steady solve and ZOH rest on."""
+    net = build_network(pkg)
+    v = krylov_basis(net, n_moments=n_moments)
+    ghat, chat, _, _ = project_network(net, v)
+    np.testing.assert_allclose(ghat, ghat.T, rtol=1e-9)
+    np.linalg.cholesky(-ghat)  # raises LinAlgError unless SPD
+    np.testing.assert_allclose(chat, np.eye(v.shape[1]), atol=1e-9)
 
 
 @given(packages(), st.floats(0.3, 4.0))

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import build, make_2p5d_package, make_3d_package
+from repro.core import (build, make_2p5d_package, make_3d_package,
+                        package_from_name)
 
 from repro.core.workloads import wl1
 
@@ -64,16 +65,8 @@ def test_heatmap_shape(small_pkg):
 # ---------------------------------------------------------------------------
 # Solver-tier cross-regressions (PR 3): "cg" vs "dense" on Table-6 systems
 # ---------------------------------------------------------------------------
-def _table6_package(system):
-    if system.startswith("3d"):
-        stacks, tiers = map(int, system[3:].split("x"))
-        return make_3d_package(stacks, tiers=tiers), stacks * tiers
-    n = int(system.split("_")[1])
-    return make_2p5d_package(n), n
-
-
 def _cross_solver_err(system, p_chip=3.0):
-    pkg, s = _table6_package(system)
+    pkg, s = package_from_name(system)
     q = np.full(s, p_chip)
     with jax.experimental.enable_x64():
         dense = build(pkg, "rc", dtype=jnp.float64, solver="dense")
@@ -94,6 +87,39 @@ def test_steady_cross_solver_2p5d_256():
     """The >=4k-node system of the sparse_solver benchmark (8196 nodes):
     the CG tier that beats dense on wall clock also matches it."""
     assert _cross_solver_err("2p5d_256") < 1e-6
+
+
+@pytest.mark.parametrize("system", ["2p5d_16", "3d_4x2"])
+def test_refined_f32_cg_matches_f64_dense(system):
+    """Mixed-precision iterative refinement: the DEFAULT f32 cg steady
+    solve (f64 host residuals + f32 device correction CG) reproduces the
+    f64 dense tier to <=1e-6 degC WITHOUT JAX_ENABLE_X64 — the
+    'f64-free CG' ROADMAP headroom item."""
+    pkg, s = package_from_name(system)
+    q = np.full(s, 3.0)
+    with jax.experimental.enable_x64():
+        dense = build(pkg, "rc", dtype=jnp.float64, solver="dense")
+        ref = np.asarray(dense.observe(dense.steady_state(q)))
+    cg = build(pkg, "rc", solver="cg")  # default f32, x64 NOT enabled
+    t_cg = cg.observe(cg.steady_state(q))
+    # the refined state stays float64 end to end through observe
+    assert isinstance(t_cg, np.ndarray) and t_cg.dtype == np.float64
+    assert np.abs(t_cg - ref).max() < 1e-6
+
+
+def test_refined_cg_threads_through_dss_steady():
+    """build(pkg, "dss", solver="cg") rides the refined closure: its f32
+    steady state now lands within the f32 representation floor of the
+    f64 dense fixed point (no x64 anywhere)."""
+    pkg = make_2p5d_package(4)
+    q = np.full(4, 3.0)
+    with jax.experimental.enable_x64():
+        dense = build(pkg, "dss", ts=0.01, dtype=jnp.float64,
+                      solver="dense")
+        ref = np.asarray(dense.observe(dense.steady_state(q)))
+    cg = build(pkg, "dss", ts=0.01, solver="cg")
+    t_cg = np.asarray(cg.observe(cg.steady_state(q)))
+    assert np.abs(t_cg - ref).max() < 1e-4  # f32 state-cast floor
 
 
 def test_transient_cross_solver(small_pkg):

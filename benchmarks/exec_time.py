@@ -23,7 +23,14 @@ Measures, per system size and per registered fidelity:
   * the ``rom`` section: the Krylov moment-matching ROM rung — basis
     construction cost, reduction ratio N/r, per-step transient time vs
     the dense tier (the node-count-independent headline) and max
-    observation error vs the full-order exact-ZOH response in f64.
+    observation error vs the full-order exact-ZOH response in f64;
+  * the ``sharded_dse`` section (PR 5): the family execution layer —
+    RC steady sweeps over meshes of {1, 2, 8} simulated host devices
+    (``mesh=`` on ``build_family``) and the B=10k chunk-streamed sweep
+    (``chunk_size=``), with speedup vs the single-device vmap path and
+    the sweep's own RSS high-water (peak minus post-setup RSS) as the
+    bounded-memory evidence. Each config runs in a subprocess so the
+    device-count flag can be set before jax initializes.
 
 All models are obtained through the fidelity registry. Results land in a
 machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
@@ -39,6 +46,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -324,6 +333,127 @@ def bench_rom(system: str, n_steps: int = 400) -> dict:
     return out
 
 
+# Each sharded_dse config runs in its OWN interpreter because the
+# simulated-device count (--xla_force_host_platform_device_count) must be
+# set before jax initializes — and because per-process peak RSS is the
+# honest bounded-memory metric for the chunk-streamed sweeps.
+_SHARDED_SCRIPT = r"""
+import json, os, resource, sys, time
+cfg = json.loads(sys.argv[1])
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + str(cfg["devices"]) + " "
+                           + os.environ.get("XLA_FLAGS", ""))
+import numpy as np
+import jax
+from repro.core import PackageFamily, build_family, make_2p5d_package
+
+pkg = make_2p5d_package(cfg["chips"])
+fam = PackageFamily(pkg, params=("grid_offsets",))
+# draw candidates in slices: sample_params validates host-side with
+# (B, E)-sized temporaries, and one B=10k draw would dominate the
+# process's RSS high-water mark — the metric meant to expose the SWEEP's
+# footprint, not setup's
+slice_b = min(cfg["b"], 1000)
+params = np.vstack([fam.sample_params(min(slice_b, cfg["b"] - s), seed=s)
+                    for s in range(0, cfg["b"], slice_b)])
+q = np.full((cfg["b"], cfg["chips"]), 3.0, np.float32)
+sim = build_family(fam, "rc",
+                   mesh=cfg["devices"] if cfg["devices"] > 1 else None,
+                   chunk_size=cfg["chunk"])
+
+def rss_mb():
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+def sweep():
+    th = sim.steady_state_batch(params, q)
+    return np.asarray(sim.observe_batch(th, params))
+
+setup_rss = rss_mb()
+t0 = time.perf_counter()
+temps = sweep()
+cold = time.perf_counter() - t0
+times = []
+for _ in range(cfg["reps"]):
+    t0 = time.perf_counter()
+    sweep()
+    times.append(time.perf_counter() - t0)
+print(json.dumps({
+    "devices": cfg["devices"], "b": cfg["b"], "chunk": cfg["chunk"],
+    "cold_s": cold, "warm_s": min(times),
+    "per_candidate_us": min(times) / cfg["b"] * 1e6,
+    "peak_temp_degc": float(temps.max()),
+    "setup_rss_mb": setup_rss,
+    "peak_rss_mb": rss_mb(),
+    "sweep_rss_mb": rss_mb() - setup_rss,  # the sweep's own high-water
+}))
+"""
+
+
+def _run_sharded_cfg(cfg: dict) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT,
+                          json.dumps(cfg)], env=env, capture_output=True,
+                         text=True, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded_dse config {cfg} failed:\n"
+                           f"{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench_sharded_dse(system: str = "2p5d_16", b_scale: int = 2048,
+                      b_stream: int = 10000, chunk: int = 512,
+                      device_counts=(1, 2, 8), reps: int = 3) -> dict:
+    """Sharded family execution (PR 5 tentpole): the RC steady sweep over
+    a mesh of simulated host devices and through the chunk-streamed path.
+
+    Two sub-sections: ``scaling`` sweeps the device count at a fixed
+    mid-size B (speedup vs the single-device vmap path — on this
+    container's few cores the interesting signal is that sharding is
+    overhead-free, on real multi-chip hosts it is the scaling itself);
+    ``streamed`` runs the large-B sweep (default 10k candidates) through
+    ``chunk_size`` streaming, on one device and on the full mesh, plus
+    the same B unchunked as the memory baseline — the sweep's own RSS
+    high-water (``sweep_rss_mb``) shows the stream holding
+    B-independent memory.
+    """
+    _, chips, _ = _package(system)  # 2.5D: one source per chiplet
+    scaling = []
+    for d in device_counts:
+        r = _run_sharded_cfg({"devices": d, "b": b_scale, "chunk": None,
+                              "chips": chips, "reps": reps})
+        scaling.append(r)
+        print(f"[sharded  ] {system:8s} B={b_scale:5d} devices={d} "
+              f"warm={r['warm_s']:.3f}s rss={r['peak_rss_mb']:.0f}MB",
+              flush=True)
+    base = next(r for r in scaling if r["devices"] == 1)["warm_s"]
+    for r in scaling:
+        r["speedup_vs_1dev"] = base / max(r["warm_s"], 1e-12)
+
+    streamed = []
+    stream_cfgs = [
+        {"devices": 1, "chunk": None},                 # vmap mem baseline
+        {"devices": 1, "chunk": chunk},
+        {"devices": max(device_counts), "chunk": chunk},
+    ]
+    for c in stream_cfgs:
+        r = _run_sharded_cfg({**c, "b": b_stream, "chips": chips,
+                              "reps": max(1, reps - 1)})
+        streamed.append(r)
+        print(f"[sharded  ] {system:8s} B={b_stream:5d} "
+              f"devices={r['devices']} chunk={r['chunk']} "
+              f"warm={r['warm_s']:.2f}s "
+              f"sweep_rss={r['sweep_rss_mb']:.0f}MB",
+              flush=True)
+    vmap_base = streamed[0]["warm_s"]
+    for r in streamed:
+        r["speedup_vs_1dev_vmap"] = vmap_base / max(r["warm_s"], 1e-12)
+    return {"system": system, "b_scale": b_scale, "b_stream": b_stream,
+            "chunk": chunk, "scaling": scaling, "streamed": streamed}
+
+
 def _steady_crossover_nodes(rows: list) -> float:
     """Dense-vs-CG steady crossover in nodes, log-log interpolated
     between the neighboring measured systems (inf if CG never wins)."""
@@ -382,6 +512,7 @@ def main(argv=None):
         # reference needs an N x N host expm — default/full runs only)
         rom_systems, rom_steps = ["2p5d_16"], 200
         dse_b = args.dse_b or 32
+        sharded_kw = dict(b_scale=256, b_stream=1024, chunk=256, reps=2)
     else:
         sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] \
             if args.full else ["2p5d_16", "3d_16x3"]
@@ -396,6 +527,7 @@ def main(argv=None):
         rom_systems = ["2p5d_16", "2p5d_64", "3d_16x6", "2p5d_256"]
         rom_steps = 400
         dse_b = args.dse_b or 128
+        sharded_kw = dict(b_scale=2048, b_stream=10000, chunk=512, reps=3)
     assembly = [bench_assembly(s) for s in assembly_systems]
     systems = [run_system(s, n_steps) for s in sim_systems]
     sparse = [bench_sparse_solver(s) for s in sparse_systems]
@@ -409,6 +541,7 @@ def main(argv=None):
         if not args.smoke else {"constant": SOLVER_CROSSOVER_NODES,
                                 "calibration_ok": None}
     rom = [bench_rom(s, n_steps=rom_steps) for s in rom_systems]
+    sharded = bench_sharded_dse("2p5d_16", **sharded_kw)
     # last: the sweep runs (and traces) under x64
     dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
     results = {"bench": "exec_time", "full": bool(args.full),
@@ -418,6 +551,7 @@ def main(argv=None):
                                  "steady_crossover_nodes": crossover,
                                  **calibration},
                "rom": rom,
+               "sharded_dse": sharded,
                "dse_sweep": dse}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -438,6 +572,12 @@ def main(argv=None):
               f"{s['max_obs_err_vs_dss_degc']:.3f}C")
     for d in dse:
         print(f"dse,{d['system']},B{d['b']},speedup,{d['speedup']:.1f}x")
+    for r in sharded["scaling"]:
+        print(f"sharded,{sharded['system']},B{r['b']},dev{r['devices']},"
+              f"speedup,{r['speedup_vs_1dev']:.2f}x")
+    for r in sharded["streamed"]:
+        print(f"sharded,{sharded['system']},B{r['b']},dev{r['devices']},"
+              f"chunk{r['chunk']},sweep_rss,{r['sweep_rss_mb']:.0f}MB")
     return results
 
 

@@ -12,6 +12,7 @@ string through the registry, at two levels:
   ``build_family(PackageFamily(pkg, params=...))`` a whole design space,
       evaluated as a device batch axis (``BatchedThermalSimulator``).
 """
+from ..distribution.family_exec import FamilyExecutor
 from .assembly import NumericAssembly, SymbolicNetwork, symbolic_network
 from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
 from .calibrate import (default_cap_multipliers, multipliers_by_layer_name,
@@ -39,6 +40,7 @@ from .rom import (ROMFamilyModel, ROMModel, build_rom, krylov_basis,
 from .workloads import ALL_WORKLOADS, P2P5D, P3D, PowerSpec, get_workload
 
 __all__ = [
+    "FamilyExecutor",
     "NumericAssembly", "SymbolicNetwork", "symbolic_network",
     "BASELINES", "hotspot_like", "pact_like", "threedice_like",
     "default_cap_multipliers", "multipliers_by_layer_name",

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.dss_step.ops import dss_rollout, dss_step
-from .fidelity import (evict_stale_jits, register_family_fidelity,
+from .fidelity import (register_family_fidelity,
                        register_fidelity)
 from .geometry import Package
 from .rc_model import (RCFamilyModel, ThermalRCModel, build_model,
@@ -311,7 +311,11 @@ class DSSFamilyModel:
     for steady sweeps. Transients (``simulate_family``) evaluate
     ``Ad = expm(A dt)`` per candidate under vmap, then roll the batch with
     one GEMM per step (the kernel formulation of ``kernels/dss_step``,
-    generalized to per-candidate Ad/Bd).
+    generalized to per-candidate Ad/Bd). Batch execution — mesh sharding,
+    padding, chunk streaming — rides the embedded RC family's
+    :class:`~repro.distribution.family_exec.FamilyExecutor` (one executor
+    per family stack, so ``mesh=``/``chunk_size=`` passed here govern the
+    steady AND transient paths).
     """
 
     fidelity = "dss"
@@ -327,7 +331,6 @@ class DSSFamilyModel:
         self.tags = self.rcf.tags
         self.source_names = self.rcf.source_names
         self.param_names = self.rcf.param_names
-        self._jits: dict = {}
 
     @property
     def n(self) -> int:
@@ -346,24 +349,24 @@ class DSSFamilyModel:
         ``dt`` defaults to the built ``ts``; any other value simply traces
         a new discretization (regeneration is part of the same jit)."""
         dt = self.ts if dt is None else float(dt)
-        key = ("simulate", round(dt, 12))  # match _regenerated's keying
-        if key not in self._jits:
-            evict_stale_jits(self._jits)
-            rcf = self.rcf
+        rcf = self.rcf
 
-            def discretize_one(p):
-                v = rcf._network(p)
-                c = v["C"]
-                g = rcf.num.dense_g(v["gvals"], v["gconv"])
-                a = g / c[:, None]
-                ad = jax.scipy.linalg.expm(a * dt)
-                eye = jnp.eye(a.shape[0], dtype=a.dtype)
-                bd = jnp.linalg.solve(a, ad - eye) @ (v["P"] / c[:, None])
-                return (ad, bd, v["H"], v["t_ambient"], v["power_scale"])
+        def discretize_one(p):
+            v = rcf._network(p.astype(self.dtype))
+            c = v["C"]
+            g = rcf.num.dense_g(v["gvals"], v["gconv"])
+            a = g / c[:, None]
+            ad = jax.scipy.linalg.expm(a * dt)
+            eye = jnp.eye(a.shape[0], dtype=a.dtype)
+            bd = jnp.linalg.solve(a, ad - eye) @ (v["P"] / c[:, None])
+            return (ad, bd, v["H"], v["t_ambient"], v["power_scale"])
 
-            self._jits[key] = jax.jit(family_zoh_simulate(
-                discretize_one, self.n, self.dtype))
-        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+        return rcf.exec.run(
+            # namespaced per family stack; dt-rounded like _regenerated
+            (f"{rcf._ns}:dss_simulate", round(dt, 12)),
+            family_zoh_simulate(discretize_one, self.n, self.dtype),
+            (params, q_traj), in_axes=(0, 1), out_axis=1,
+            pad_rows=(rcf._pad_param_row, None))
 
 
 @register_family_fidelity("dss")

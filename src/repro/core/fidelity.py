@@ -21,10 +21,25 @@ Level 2 — a whole design space in one device call (PR 2)::
 
     from repro.core import PackageFamily, build_family
     fam = PackageFamily(pkg, params=("grid_offsets", "htc_top"))
-    sim = build_family(fam, fidelity="rc")    # or "dss", "fvm"
+    sim = build_family(fam, fidelity="rc")    # or "dss", "fvm", "rom"
     theta = sim.steady_state_batch(p, q)      # p (B,P) params, q (B,S)
     temps = sim.observe_batch(theta, p)       # (B, n_obs) absolute degC
     obs = sim.simulate_family(p, q_traj, dt)  # q (T,B,S) -> (T,B,n_obs)
+
+Orthogonal to both axes is the EXECUTION LAYOUT (PR 5): every family
+fidelity routes its candidate batch through a
+``distribution/family_exec.FamilyExecutor`` and accepts::
+
+    sim = build_family(fam, "rc", mesh=8, chunk_size=512)
+
+``mesh=`` (a ``jax.sharding.Mesh`` or an int device count) shards the
+``(B, P)`` axis across the mesh's ``data`` axis via ``shard_map`` —
+candidates are independent, so sweeps scale with device count with zero
+collectives (non-divisible B is padded with the template candidate and
+sliced off). ``chunk_size=`` streams larger-than-memory sweeps over
+fixed-size candidate chunks, landing each chunk's result in host memory
+(the RC steady CG warm-starts each chunk from the previous one). The
+``sharded_dse`` section of ``BENCH_exec_time.json`` tracks both.
 
 ``build(pkg, fid)`` is the degenerate single-element case of the family
 API: a family whose parameter set is empty pins the template, and the
@@ -217,8 +232,12 @@ def build_family(family, fidelity: str = "rc",
     The family's template is assembled ONCE (symbolic phase); every call
     then evaluates a ``(B, P)`` parameter batch as a device batch axis
     (numeric phase) — no per-candidate host assembly, jit, or dispatch.
-    Implemented for "rc", "dss" and "fvm"; the baseline emulations model
-    per-package external tools and raise ``NotImplementedError``.
+    Implemented for "rc", "dss", "fvm" and "rom"; the baseline emulations
+    model per-package external tools and raise ``NotImplementedError``.
+
+    All family builders accept the execution-layout knobs ``mesh=`` /
+    ``chunk_size=`` (or a shared ``executor=``) — see the module
+    docstring and ``distribution/family_exec.py``.
     """
     _ensure_registered()
     if fidelity not in _FAMILY_REGISTRY:

@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fidelity import (evict_stale_jits, register_family_fidelity,
-                       register_fidelity, simulate_batch_via_vmap)
+from ..distribution.family_exec import FamilyExecutor
+from .fidelity import (register_family_fidelity, register_fidelity,
+                       simulate_batch_via_vmap)
 from .geometry import Package
 
 
@@ -335,6 +336,8 @@ def build_fvm(pkg: Package, dx_target: float = 0.5e-3,
 class _FamilyBlock:
     """Static per-block record for the traced voxelizer."""
     zmask: np.ndarray        # (nz,) bool — slabs of the block's layer
+    layer_idx: int
+    moving: bool             # any nonzero placement weight
     x0: float                # template corners (offsets apply on top)
     y0: float
     x1: float
@@ -357,10 +360,21 @@ class FVMFamilyModel:
     a traced function of the parameter vector (block masks move with the
     placement offsets exactly as ``voxelize`` would place them, so results
     match a per-candidate ``build(pkg, "fvm")`` loop bit-for-mask). Solves
-    are the same matrix-free Jacobi-CG as :class:`FVMReference`, vmapped
-    over the batch. This is the VALIDATION fidelity of the family ladder —
-    run it at small B to ground the RC/DSS sweeps, not for the sweeps
-    themselves.
+    are the same matrix-free Jacobi-CG as :class:`FVMReference`; batch
+    execution rides a
+    :class:`~repro.distribution.family_exec.FamilyExecutor`
+    (``mesh=``/``chunk_size=``/``executor=``). This is the VALIDATION
+    fidelity of the family ladder — run it at small B to ground the
+    RC/DSS sweeps, not for the sweeps themselves.
+
+    STATIC blocks — all placement weights zero (non-parameterized
+    chiplets, funnels of pinned sites, every block of thickness-/
+    scalar-only families) — are rasterized ONCE on the host: their
+    material overlays fold into the background fields and their
+    source/observation weight fields are presummed, so the traced
+    per-candidate program holds only the MOVING blocks (PR 5 satellite;
+    for scalar-only families the trace contains no rasterization at
+    all).
     """
 
     fidelity = "fvm"
@@ -368,7 +382,9 @@ class FVMFamilyModel:
     def __init__(self, family, dx_target: float = 0.5e-3,
                  dz_target: float = 0.15e-3, max_slabs: int = 6,
                  cg_tol: float = 1e-6, cg_maxiter: int = 400,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None,
+                 chunk_size: Optional[int] = None,
+                 executor: Optional[FamilyExecutor] = None):
         pkg = family.template
         self.family = family
         self.dtype = dtype
@@ -376,6 +392,9 @@ class FVMFamilyModel:
         self.param_names = list(family.param_names)
         self._slots = family.scalar_slots
         self._htc_bottom = pkg.htc_bottom
+        self.exec = executor if executor is not None else \
+            FamilyExecutor(mesh=mesh, chunk_size=chunk_size)
+        self._ns = self.exec.register()  # jit-cache namespace
 
         nx = max(2, int(round(pkg.length / dx_target)))
         ny = max(2, int(round(pkg.width / dx_target)))
@@ -408,19 +427,57 @@ class FVMFamilyModel:
         for z in range(nz):
             m = pkg.layers[layer_of_slab[z]].material
             bg[:, z] = np.array([m.kx, m.ky, m.kz, m.cv])[:, None, None]
-        self._bg = jnp.asarray(bg, dtype)
         self.blocks = []
         for li, b, wx, wy in family.block_affine():
             zmask = self.layer_of_slab == li
             self.blocks.append(_FamilyBlock(
-                zmask=zmask, x0=b.x0, y0=b.y0, x1=b.x1, y1=b.y1,
+                zmask=zmask, layer_idx=li,
+                moving=bool(wx.any() or wy.any()),
+                x0=b.x0, y0=b.y0, x1=b.x1, y1=b.y1,
                 wx=wx, wy=wy, kx=b.material.kx, ky=b.material.ky,
                 kz=b.material.kz, cv=b.material.cv,
                 power_name=b.power_name, tag=b.tag))
         self.source_names = sorted({b.power_name for b in self.blocks
                                     if b.power_name is not None})
         self.tags = sorted({b.tag for b in self.blocks if b.tag})
-        self._jits: dict = {}
+
+        # hoist STATIC rasterization out of the per-candidate trace.
+        # Material overlays are order-sensitive (later blocks override),
+        # so a static block folds into the background only while no
+        # moving block has been seen in its layer; any later static
+        # block stays traced to preserve the overlay order exactly.
+        def host_mask(blk):
+            m2 = ((XX >= blk.x0) & (XX < blk.x1)
+                  & (YY >= blk.y0) & (YY < blk.y1))
+            return blk.zmask[:, None, None] & m2[None]
+
+        self._traced_blocks = []
+        moving_layers: set = set()
+        for blk in self.blocks:
+            if blk.moving or blk.layer_idx in moving_layers:
+                if blk.moving:
+                    moving_layers.add(blk.layer_idx)
+                self._traced_blocks.append(blk)
+            else:
+                m3 = host_mask(blk)
+                for f, v in enumerate((blk.kx, blk.ky, blk.kz, blk.cv)):
+                    bg[f][m3] = v
+        self._bg = jnp.asarray(bg, dtype)
+        # source/observation weights are order-independent SUMS, so every
+        # static block's contribution (even order-pinned ones above) is
+        # presummed on the host; the trace adds only moving-block masks
+        src_static = np.zeros((max(len(self.source_names), 1), *self.shape))
+        obs_static = np.zeros((max(len(self.tags), 1), *self.shape))
+        for blk in self.blocks:
+            if blk.moving:
+                continue
+            m3 = host_mask(blk)
+            if blk.power_name is not None:
+                src_static[self.source_names.index(blk.power_name)] += m3
+            if blk.tag:
+                obs_static[self.tags.index(blk.tag)] += m3
+        self._src_static = jnp.asarray(src_static, dtype)
+        self._obs_static = jnp.asarray(obs_static, dtype)
 
     @property
     def n_vox(self) -> int:
@@ -441,30 +498,35 @@ class FVMFamilyModel:
         return jnp.asarray(blk.zmask)[:, None, None] & m2[None]
 
     def _fields(self, p):
-        """One parameter vector -> voxel fields (pure jax; vmap me)."""
+        """One parameter vector -> voxel fields (pure jax; vmap me).
+
+        Only MOVING blocks are rasterized in the trace; static blocks
+        were folded into ``_bg`` / ``_src_static`` / ``_obs_static`` at
+        construction, so the traced op count scales with the number of
+        placement-parameterized blocks, not the package's block count."""
         kx, ky, kz, cv = (self._bg[i] for i in range(4))
-        masks = []
-        for blk in self.blocks:
+        masks = []  # (blk, m3) for traced blocks, original overlay order
+        for blk in self._traced_blocks:
             m3 = self._block_mask(blk, p)
-            masks.append(m3)
+            masks.append((blk, m3))
             kx = jnp.where(m3, blk.kx, kx)
             ky = jnp.where(m3, blk.ky, ky)
             kz = jnp.where(m3, blk.kz, kz)
             cv = jnp.where(m3, blk.cv, cv)
 
         src = []
-        for name in self.source_names:
-            w = sum(m3.astype(self.dtype)
-                    for blk, m3 in zip(self.blocks, masks)
-                    if blk.power_name == name)
+        for k, name in enumerate(self.source_names):
+            w = self._src_static[k] \
+                + sum(m3.astype(self.dtype) for blk, m3 in masks
+                      if blk.moving and blk.power_name == name)
             src.append(w / jnp.maximum(w.sum(), 1e-30))
         src = jnp.stack(src) if src else jnp.zeros((0, *self.shape),
                                                    self.dtype)
         obs = []
-        for tag in self.tags:
-            w = sum(m3.astype(self.dtype)
-                    for blk, m3 in zip(self.blocks, masks)
-                    if blk.tag == tag)
+        for k, tag in enumerate(self.tags):
+            w = self._obs_static[k] \
+                + sum(m3.astype(self.dtype) for blk, m3 in masks
+                      if blk.moving and blk.tag == tag)
             obs.append(w / jnp.maximum(w.sum(), 1e-30))
         obs = jnp.stack(obs) if obs else jnp.zeros((0, *self.shape),
                                                    self.dtype)
@@ -510,75 +572,77 @@ class FVMFamilyModel:
         return d + f["conv"]
 
     # -- batched solves ------------------------------------------------------
+    @property
+    def _pad_param_row(self) -> np.ndarray:
+        return np.asarray(self.family.base_params())
+
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
         """params (B, P), q_src (B, S) -> steady theta (B, nz, ny, nx)."""
-        if "steady" not in self._jits:
-            def one(p, qb):
-                f = self._fields(p)
-                rhs = jnp.einsum("s,szyx->zyx",
-                                 qb.astype(self.dtype)
-                                 * f["power_scale"], f["src"])
-                diag = self._neg_l_diag(f)
-                sol, _ = jax.scipy.sparse.linalg.cg(
-                    lambda x: -self._laplacian(f, x), rhs,
-                    tol=self.cg_tol, maxiter=self.cg_maxiter * 4,
-                    M=lambda x: x / diag)
-                return sol
+        def one(p, qb):
+            f = self._fields(p.astype(self.dtype))
+            rhs = jnp.einsum("s,szyx->zyx",
+                             qb.astype(self.dtype)
+                             * f["power_scale"], f["src"])
+            diag = self._neg_l_diag(f)
+            sol, _ = jax.scipy.sparse.linalg.cg(
+                lambda x: -self._laplacian(f, x), rhs,
+                tol=self.cg_tol, maxiter=self.cg_maxiter * 4,
+                M=lambda x: x / diag)
+            return sol
 
-            self._jits["steady"] = jax.jit(jax.vmap(one))
-        return self._jits["steady"](jnp.asarray(params, self.dtype),
-                                    jnp.asarray(q_src, self.dtype))
+        return self.exec.run(f"{self._ns}:fvm_steady", one,
+                             (params, q_src),
+                             in_axes=(0, 0), per_candidate=True,
+                             pad_rows=(self._pad_param_row, None))
 
     def observe_batch(self, theta, params) -> jnp.ndarray:
         """theta (B, nz, ny, nx), params (B, P) -> (B, n_obs) degC."""
-        if "observe" not in self._jits:
-            def one(th, p):
-                f = self._fields(p)
-                return jnp.einsum("ozyx,zyx->o", f["obs"], th) \
-                    + f["t_ambient"]
+        def one(th, p):
+            f = self._fields(p.astype(self.dtype))
+            return jnp.einsum("ozyx,zyx->o", f["obs"],
+                              th.astype(self.dtype)) + f["t_ambient"]
 
-            self._jits["observe"] = jax.jit(jax.vmap(one))
-        return self._jits["observe"](theta, jnp.asarray(params, self.dtype))
+        return self.exec.run(f"{self._ns}:fvm_observe", one,
+                             (theta, params),
+                             in_axes=(0, 0), per_candidate=True,
+                             pad_rows=(None, self._pad_param_row))
 
     def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:
         """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs)."""
-        key = ("simulate", float(dt))
-        if key not in self._jits:
-            evict_stale_jits(self._jits)
+        def one(p, q_t):
+            f = self._fields(p.astype(self.dtype))
+            cdt = f["cvol"] / dt
+            diag = cdt + self._neg_l_diag(f)
 
-            def one(p, q_t):
-                f = self._fields(p)
-                cdt = f["cvol"] / dt
-                diag = cdt + self._neg_l_diag(f)
+            def mv(x):
+                return cdt * x - self._laplacian(f, x)
 
-                def mv(x):
-                    return cdt * x - self._laplacian(f, x)
+            def body(th, qt):
+                rhs = cdt * th + jnp.einsum(
+                    "s,szyx->zyx",
+                    qt.astype(self.dtype) * f["power_scale"],
+                    f["src"])
+                th, _ = jax.scipy.sparse.linalg.cg(
+                    mv, rhs, x0=th, tol=self.cg_tol,
+                    maxiter=self.cg_maxiter, M=lambda x: x / diag)
+                return th, jnp.einsum("ozyx,zyx->o", f["obs"], th)
 
-                def body(th, qt):
-                    rhs = cdt * th + jnp.einsum(
-                        "s,szyx->zyx",
-                        qt.astype(self.dtype) * f["power_scale"],
-                        f["src"])
-                    th, _ = jax.scipy.sparse.linalg.cg(
-                        mv, rhs, x0=th, tol=self.cg_tol,
-                        maxiter=self.cg_maxiter, M=lambda x: x / diag)
-                    return th, jnp.einsum("ozyx,zyx->o", f["obs"], th)
+            th0 = jnp.zeros(self.shape, self.dtype)
+            _, o = jax.lax.scan(body, th0, q_t)
+            return o + f["t_ambient"]
 
-                th0 = jnp.zeros(self.shape, self.dtype)
-                _, o = jax.lax.scan(body, th0, q_t)
-                return o + f["t_ambient"]
-
-            self._jits[key] = jax.jit(jax.vmap(one, in_axes=(0, 1),
-                                               out_axes=1))
-        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+        return self.exec.run((f"{self._ns}:fvm_simulate", float(dt)), one,
+                             (params, q_traj), in_axes=(0, 1), out_axis=1,
+                             per_candidate=True,
+                             pad_rows=(self._pad_param_row, None))
 
 
 @register_family_fidelity("fvm")
 def build_fvm_family(family, dx_target: float = 0.5e-3,
                      dz_target: float = 0.15e-3, max_slabs: int = 6,
                      cg_tol: float = 1e-6, cg_maxiter: int = 400,
-                     dtype=jnp.float32,
-                     solver: str = "cg") -> FVMFamilyModel:
+                     dtype=jnp.float32, solver: str = "cg",
+                     **exec_opts) -> FVMFamilyModel:
     if solver == "dense":
         raise NotImplementedError(
             "the FVM family solver is natively matrix-free; "
@@ -588,4 +652,4 @@ def build_fvm_family(family, dx_target: float = 0.5e-3,
         raise ValueError(f"unknown solver {solver!r}")
     return FVMFamilyModel(family, dx_target=dx_target, dz_target=dz_target,
                           max_slabs=max_slabs, cg_tol=cg_tol,
-                          cg_maxiter=cg_maxiter, dtype=dtype)
+                          cg_maxiter=cg_maxiter, dtype=dtype, **exec_opts)

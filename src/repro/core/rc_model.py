@@ -27,11 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distribution.family_exec import FamilyExecutor
 from ..kernels.coo_matvec.ops import coo_matvec, coo_plan, coo_segment_sum
 from .assembly import NumericAssembly, adjacency_within, overlap_between
-from .fidelity import (evict_stale_jits, register_family_fidelity,
-                       register_fidelity, resolve_solver,
-                       simulate_batch_via_vmap)
+from .fidelity import (register_family_fidelity, register_fidelity,
+                       resolve_solver, simulate_batch_via_vmap)
 from .geometry import NodeGrid, Package, chiplet_tags, discretize
 
 _EPS = 1e-12
@@ -630,6 +630,14 @@ class RCFamilyModel:
         factorization is never formed — each step is a warm-started
         batched Jacobi-CG on the COO matvec kernel, the large-N path.
 
+    This class expresses only the per-candidate math; BATCH EXECUTION —
+    vmap/jit plumbing, mesh sharding of the candidate axis, padding of
+    non-divisible B, and chunk streaming of larger-than-memory sweeps
+    (with the steady CG warm-started across chunks) — is delegated to a
+    :class:`~repro.distribution.family_exec.FamilyExecutor` (PR 5).
+    Construct with ``mesh=``/``chunk_size=`` (or a shared ``executor=``,
+    as the DSS/ROM rungs do) to select the execution layout.
+
     Use ``dtype=jnp.float64`` (inside ``jax.experimental.enable_x64()``)
     to validate against a per-candidate ``build()`` loop to <=1e-6 degC.
     """
@@ -638,8 +646,13 @@ class RCFamilyModel:
 
     def __init__(self, family, cap_multipliers: Optional[dict] = None,
                  dtype=jnp.float32, cg_tol: Optional[float] = None,
-                 cg_maxiter: int = 150, solver: str = "dense"):
+                 cg_maxiter: int = 150, solver: str = "dense",
+                 mesh=None, chunk_size: Optional[int] = None,
+                 executor: Optional[FamilyExecutor] = None):
         self.family = family
+        self.exec = executor if executor is not None else \
+            FamilyExecutor(mesh=mesh, chunk_size=chunk_size)
+        self._ns = self.exec.register()  # jit-cache namespace
         self.num = NumericAssembly(
             family.sym, dtype=dtype,
             cap_multipliers=_resolve_cap_multipliers(family.template,
@@ -661,19 +674,20 @@ class RCFamilyModel:
         self._htc_bottom = family.template.htc_bottom
         self.t_ambient = family.template.t_ambient  # template value
         self._chol0_cache = None
-        self._jits: dict = {}
 
     @property
     def _chol0(self) -> jnp.ndarray:
         """Template preconditioner: -G(p0) Cholesky-factored once on the
         host (f64) — lazily, so consumers that never touch the batched
         steady solve (e.g. the ROM family riding only ``reduced_ops``)
-        skip the O(N^3) factorization entirely."""
+        skip the O(N^3) factorization entirely. The CACHE holds the host
+        numpy factor: first access usually happens inside a jit trace,
+        and caching the device conversion there would leak a tracer into
+        later traces (each trace re-embeds the constant instead)."""
         if self._chol0_cache is None:
             net0 = self.family.template_network()
-            self._chol0_cache = jnp.asarray(
-                np.linalg.cholesky(-net0.g_dense()), self.dtype)
-        return self._chol0_cache
+            self._chol0_cache = np.linalg.cholesky(-net0.g_dense())
+        return jnp.asarray(self._chol0_cache, self.dtype)
 
     @property
     def n(self) -> int:
@@ -722,13 +736,20 @@ class RCFamilyModel:
                 v["t_ambient"], v["power_scale"])
 
     # -- batched steady state ------------------------------------------------
-    def _pcg(self, gvals, gconv, rhs):
+    @property
+    def _pad_param_row(self) -> np.ndarray:
+        """Pad element for non-divisible B: the template's own parameter
+        vector, so executor padding always evaluates valid geometry."""
+        return np.asarray(self.family.base_params())
+
+    def _pcg(self, gvals, gconv, rhs, x0):
         """Batched PCG on (-G(p)) x = rhs, shared template preconditioner.
 
-        gvals (B, E_sym), gconv (B, N), rhs (B, N) -> x (B, N). The
-        matvec is the shared COO segment-sum kernel with the batch riding
-        its GEMM sublane axis (no vmap); the preconditioner is one BLAS-3
-        triangular-solve pair over the whole batch.
+        gvals (B, E_sym), gconv (B, N), rhs (B, N), x0 (B, N) -> x (B, N).
+        The matvec is the shared COO segment-sum kernel with the batch
+        riding its GEMM sublane axis (no vmap); the preconditioner is one
+        BLAS-3 triangular-solve pair over the whole batch. ``x0`` is the
+        warm start the executor threads across streamed chunks.
         """
         num = self.num
         diag = num.neg_g_diag(gvals, gconv)  # (B, N), batched natively
@@ -742,40 +763,66 @@ class RCFamilyModel:
         def prec(r):  # one BLAS-3 triangular-solve pair for the batch
             return jax.scipy.linalg.cho_solve((chol0, True), r.T).T
 
-        return _batched_pcg(matvec, prec, rhs, jnp.zeros_like(rhs),
+        return _batched_pcg(matvec, prec, rhs, x0,
                             self.cg_tol, self.cg_maxiter)
 
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
-        """params (B, P), q_src (B, S) -> steady theta (B, N)."""
-        if "steady" not in self._jits:
-            def _steady(params, q):
-                def net(p):
-                    v = self._network(p)
-                    return (v["gvals"], v["gconv"], v["P"],
-                            v["power_scale"])
+        """params (B, P), q_src (B, S) -> steady theta (B, N).
 
-                gvals, gconv, pmat, scale = jax.vmap(net)(params)
-                rhs = jnp.einsum("bns,bs->bn", pmat,
-                                 q.astype(self.dtype) * scale[:, None])
-                return self._pcg(gvals, gconv, rhs)
+        Natively batched through the executor: candidates shard over the
+        mesh, and chunk-streamed sweeps warm-start each chunk's CG from
+        the previous chunk's converged states (placements in one sweep
+        are thermally similar, so the carry saves iterations)."""
+        def _steady(x0, params, q):
+            def net(p):
+                v = self._network(p)
+                return (v["gvals"], v["gconv"], v["P"], v["power_scale"])
 
-            self._jits["steady"] = jax.jit(_steady)
-        return self._jits["steady"](jnp.asarray(params, self.dtype),
-                                    jnp.asarray(q_src, self.dtype))
+            gvals, gconv, pmat, scale = jax.vmap(net)(
+                params.astype(self.dtype))
+            rhs = jnp.einsum("bns,bs->bn", pmat,
+                             q.astype(self.dtype) * scale[:, None])
+            th = self._pcg(gvals, gconv, rhs, x0)
+            return th, th
+
+        return self.exec.run(
+            f"{self._ns}:rc_steady", _steady, (params, q_src),
+            in_axes=(0, 0),
+            out_axis=0, pad_rows=(self._pad_param_row, None),
+            make_carry=lambda b: jnp.zeros((b, self.n), self.dtype))
 
     def observe_batch(self, theta, params) -> jnp.ndarray:
         """theta (B, N), params (B, P) -> absolute degC (B, n_obs)."""
-        if "observe" not in self._jits:
-            def _observe(theta, params):
-                def one(th, p):
-                    # XLA dead-code-eliminates the unused network values
-                    v = self._network(p)
-                    return v["H"] @ th + v["t_ambient"]
+        def one(th, p):
+            # XLA dead-code-eliminates the unused network values
+            v = self._network(p.astype(self.dtype))
+            return v["H"] @ th.astype(self.dtype) + v["t_ambient"]
 
-                return jax.vmap(one)(theta, params)
+        return self.exec.run(f"{self._ns}:rc_observe", one,
+                             (theta, params),
+                             in_axes=(0, 0), per_candidate=True,
+                             pad_rows=(None, self._pad_param_row))
 
-            self._jits["observe"] = jax.jit(_observe)
-        return self._jits["observe"](theta, jnp.asarray(params, self.dtype))
+    def peak_steady(self, params, q_src) -> jnp.ndarray:
+        """Differentiable peak steady temperature per candidate (B,).
+
+        ``jax.grad``-able w.r.t. ``params`` end to end (groundwork for
+        gradient-based DSE): the numeric phase is pure jax and the solve
+        is the dense path — no iteration-count-dependent ``while_loop``
+        in the way of reverse-mode AD. Deliberately NOT routed through
+        the executor (host-side padding/chunking would break tracing);
+        for placement optimization B is a handful of optimizer states,
+        not a sweep. Softmax-free: the true max, so the gradient follows
+        the argmax observation point.
+        """
+        def one(p, qb):
+            v = self._network(p.astype(self.dtype))
+            g = self.num.dense_g(v["gvals"], v["gconv"])
+            rhs = v["P"] @ (qb.astype(self.dtype) * v["power_scale"])
+            th = jnp.linalg.solve(-g, rhs)
+            return jnp.max(v["H"] @ th + v["t_ambient"])
+
+        return jax.vmap(one)(jnp.asarray(params), jnp.asarray(q_src))
 
     # -- batched transient ---------------------------------------------------
     def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:
@@ -784,38 +831,37 @@ class RCFamilyModel:
         Backward Euler from ambient. Solver tier "dense": one batched
         Cholesky of ``C/dt - G(p)`` per candidate, amortized over all T
         steps. Tier "cg": no factorization is ever formed — every step is
-        a warm-started batched Jacobi-CG on the COO matvec kernel.
+        a warm-started batched Jacobi-CG on the COO matvec kernel. Both
+        tiers ride the executor (mesh-sharded / chunk-streamed batch).
         """
-        key = ("simulate", float(dt))
-        if key not in self._jits:
-            evict_stale_jits(self._jits)
-            if self.solver == "cg":
-                self._jits[key] = jax.jit(self._make_simulate_cg(dt))
-                return self._jits[key](
-                    jnp.asarray(params, self.dtype), q_traj)
+        if self.solver == "cg":
+            return self.exec.run(
+                (f"{self._ns}:rc_simulate_cg", float(dt)),
+                self._make_simulate_cg(dt),
+                (params, q_traj), in_axes=(0, 1), out_axis=1,
+                pad_rows=(self._pad_param_row, None))
 
-            def one(p, q_t):  # q_t (T, S)
-                v = self._network(p)
-                c_dt = v["C"] / dt
-                m = jnp.diag(c_dt) - self.num.dense_g(v["gvals"],
-                                                      v["gconv"])
-                chol = jnp.linalg.cholesky(m)
-                pmat, h = v["P"], v["H"]
-                scale = v["power_scale"]
+        def one(p, q_t):  # q_t (T, S)
+            v = self._network(p.astype(self.dtype))
+            c_dt = v["C"] / dt
+            m = jnp.diag(c_dt) - self.num.dense_g(v["gvals"], v["gconv"])
+            chol = jnp.linalg.cholesky(m)
+            pmat, h = v["P"], v["H"]
+            scale = v["power_scale"]
 
-                def body(th, qt):
-                    rhs = c_dt * th + pmat @ (qt.astype(self.dtype)
-                                              * scale)
-                    th = jax.scipy.linalg.cho_solve((chol, True), rhs)
-                    return th, h @ th
+            def body(th, qt):
+                rhs = c_dt * th + pmat @ (qt.astype(self.dtype) * scale)
+                th = jax.scipy.linalg.cho_solve((chol, True), rhs)
+                return th, h @ th
 
-                th0 = jnp.zeros((self.n,), self.dtype)
-                _, obs = jax.lax.scan(body, th0, q_t)
-                return obs + v["t_ambient"]
+            th0 = jnp.zeros((self.n,), self.dtype)
+            _, obs = jax.lax.scan(body, th0, q_t)
+            return obs + v["t_ambient"]
 
-            self._jits[key] = jax.jit(jax.vmap(one, in_axes=(0, 1),
-                                               out_axes=1))
-        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+        return self.exec.run((f"{self._ns}:rc_simulate", float(dt)), one,
+                             (params, q_traj), in_axes=(0, 1), out_axis=1,
+                             per_candidate=True,
+                             pad_rows=(self._pad_param_row, None))
 
     def _make_simulate_cg(self, dt: float):
         """Matrix-free family transient: backward Euler where each step
@@ -831,7 +877,8 @@ class RCFamilyModel:
                 return (v["C"], v["gvals"], v["gconv"], v["P"], v["H"],
                         v["t_ambient"], v["power_scale"])
 
-            c, gvals, gconv, pmat, h, t_amb, scale = jax.vmap(net)(params)
+            c, gvals, gconv, pmat, h, t_amb, scale = jax.vmap(net)(
+                params.astype(self.dtype))
             cdt = c / dt
             neg_g_diag = num.neg_g_diag(gvals, gconv)   # (B, N)
             mdiag = cdt + neg_g_diag                    # diag of C/dt - G
@@ -860,5 +907,9 @@ class RCFamilyModel:
 @register_family_fidelity("rc")
 def build_rc_family(family, cap_multipliers: Optional[dict] = None,
                     dtype=jnp.float32, **opts) -> RCFamilyModel:
+    """Registry builder. Besides the solver-tier knobs, ``mesh=`` (a
+    ``jax.sharding.Mesh`` or an int device count) and ``chunk_size=``
+    select the family execution layout (see
+    ``distribution/family_exec.py``)."""
     return RCFamilyModel(family, cap_multipliers=cap_multipliers,
                          dtype=dtype, **opts)

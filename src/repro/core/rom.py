@@ -379,7 +379,10 @@ class ROMFamilyModel:
     traced numeric phase — and solves/steps in the reduced space. The
     family transient is an exact ZOH per candidate (vmapped r x r expm,
     amortized over all steps) whose rollout is batched r x r GEMMs: no
-    per-candidate CG iteration, no N x N factorization.
+    per-candidate CG iteration, no N x N factorization. Batch execution
+    (mesh sharding / chunk streaming, PR 5) rides the embedded RC
+    family's :class:`~repro.distribution.family_exec.FamilyExecutor` —
+    pass ``mesh=``/``chunk_size=`` through ``build_family``.
     """
 
     fidelity = "rom"
@@ -408,7 +411,6 @@ class ROMFamilyModel:
                                  cg_maxiter=cg_maxiter)
         self.V = np.asarray(basis, np.float64)
         self._vd = jnp.asarray(self.V, dtype)
-        self._jits: dict = {}
 
     @property
     def r(self) -> int:
@@ -423,57 +425,60 @@ class ROMFamilyModel:
         return self.rcf.reduced_ops(p, self._vd)
 
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
-        """params (B, P), q_src (B, S) -> reduced steady states (B, r)."""
-        if "steady" not in self._jits:
-            def _steady(params, q):
-                ghat, _, phat, _, _, scale = jax.vmap(self._reduced)(params)
-                rhs = jnp.einsum("brs,bs->br", phat,
-                                 q.astype(self.dtype) * scale[:, None])
-                return jnp.linalg.solve(-ghat, rhs[..., None])[..., 0]
+        """params (B, P), q_src (B, S) -> reduced steady states (B, r).
 
-            self._jits["steady"] = jax.jit(_steady)
-        return self._jits["steady"](jnp.asarray(params, self.dtype),
-                                    jnp.asarray(q_src, self.dtype))
+        Natively batched (one r x r solve per candidate); the embedded
+        RC family's executor shards/streams the candidate axis."""
+        def _steady(params, q):
+            ghat, _, phat, _, _, scale = jax.vmap(self._reduced)(
+                params.astype(self.dtype))
+            rhs = jnp.einsum("brs,bs->br", phat,
+                             q.astype(self.dtype) * scale[:, None])
+            return jnp.linalg.solve(-ghat, rhs[..., None])[..., 0]
+
+        return self.rcf.exec.run(
+            f"{self.rcf._ns}:rom_steady", _steady, (params, q_src),
+            in_axes=(0, 0),
+            out_axis=0, pad_rows=(self.rcf._pad_param_row, None))
 
     def observe_batch(self, theta_hat, params) -> jnp.ndarray:
         """theta_hat (B, r), params (B, P) -> absolute degC (B, n_obs)."""
-        if "observe" not in self._jits:
-            def _observe(theta_hat, params):
-                def one(th, p):
-                    # XLA dead-code-eliminates the unused reduced blocks
-                    _, _, _, hhat, t_amb, _ = self._reduced(p)
-                    return hhat @ th + t_amb
+        def one(th, p):
+            # XLA dead-code-eliminates the unused reduced blocks
+            _, _, _, hhat, t_amb, _ = self._reduced(p.astype(self.dtype))
+            return hhat @ th.astype(self.dtype) + t_amb
 
-                return jax.vmap(one)(theta_hat, params)
-
-            self._jits["observe"] = jax.jit(_observe)
-        return self._jits["observe"](theta_hat,
-                                     jnp.asarray(params, self.dtype))
+        return self.rcf.exec.run(
+            f"{self.rcf._ns}:rom_observe", one, (theta_hat, params),
+            in_axes=(0, 0),
+            per_candidate=True, pad_rows=(None, self.rcf._pad_param_row))
 
     def simulate_family(self, params, q_traj,
                         dt: Optional[float] = None) -> jnp.ndarray:
         """params (B, P), q_traj (T, B, S) -> obs temps (T, B, n_obs).
 
         Exact ZOH per candidate: one vmapped r x r ``expm`` amortized
-        over all T steps, then batched r x r GEMMs per step.
+        over all T steps, then batched r x r GEMMs per step — sharded
+        and chunk-streamed by the shared family executor.
         """
         dt = self.ts if dt is None else float(dt)
-        key = ("simulate", round(dt, 12))  # match the _zoh cache keying
-        if key not in self._jits:
-            evict_stale_jits(self._jits)
 
-            def discretize_one(p):
-                ghat, chat, phat, hhat, t_amb, scale = self._reduced(p)
-                a = jnp.linalg.solve(chat, ghat)
-                ad = jax.scipy.linalg.expm(a * dt)
-                eye = jnp.eye(a.shape[0], dtype=a.dtype)
-                bd = jnp.linalg.solve(a, ad - eye) \
-                    @ jnp.linalg.solve(chat, phat)
-                return ad, bd, hhat, t_amb, scale
+        def discretize_one(p):
+            ghat, chat, phat, hhat, t_amb, scale = self._reduced(
+                p.astype(self.dtype))
+            a = jnp.linalg.solve(chat, ghat)
+            ad = jax.scipy.linalg.expm(a * dt)
+            eye = jnp.eye(a.shape[0], dtype=a.dtype)
+            bd = jnp.linalg.solve(a, ad - eye) \
+                @ jnp.linalg.solve(chat, phat)
+            return ad, bd, hhat, t_amb, scale
 
-            self._jits[key] = jax.jit(family_zoh_simulate(
-                discretize_one, self.r, self.dtype))
-        return self._jits[key](jnp.asarray(params, self.dtype), q_traj)
+        return self.rcf.exec.run(
+            # namespaced per family stack; dt-rounded like the _zoh cache
+            (f"{self.rcf._ns}:rom_simulate", round(dt, 12)),
+            family_zoh_simulate(discretize_one, self.r, self.dtype),
+            (params, q_traj), in_axes=(0, 1), out_axis=1,
+            pad_rows=(self.rcf._pad_param_row, None))
 
 
 @register_family_fidelity("rom")

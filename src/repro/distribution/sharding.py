@@ -22,6 +22,17 @@ Decode KV caches shard batch over `data` and the cache LENGTH over `model`
 (uniform rule across GQA/MLA/hybrid archs — flash-decoding's partial-softmax
 combine falls out of GSPMD's sharded-softmax handling). Mamba states shard
 heads/channels over `model`.
+
+Scope note: these GSPMD param/cache rules serve the LM scaffold ONLY.
+The thermal family sweeps (``core/family.py`` models) do NOT lay out
+weights through this module — their batch axis goes through
+``distribution/family_exec.py``, which reuses just two pieces of this
+scaffold: the ``launch/mesh.make_host_mesh`` construction and the
+``data`` axis-naming convention for the candidate batch (so a thermal
+sweep and an LM job can share one mesh without re-deriving axes). Family
+execution is `shard_map`-based data parallelism with no collectives —
+if the rules here change, the thermal path only cares that the mesh
+keeps a ``data`` axis.
 """
 from __future__ import annotations
 

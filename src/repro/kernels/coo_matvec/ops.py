@@ -15,6 +15,17 @@ Both accept arbitrary leading batch axes ((B, E) edge values against
 sublane dimension of the kernel, so the family solvers need no vmap
 around the matvec.
 
+This batch axis also composes with the MESH-SHARDED candidate batch of
+``distribution/family_exec.py``: family solvers run inside ``shard_map``
+blocks where the :class:`COOPlan` is a closure constant (replicated to
+every shard — the plan describes the topology, which is identical for
+all candidates) and the local ``B/k`` batch slice rides the leading axes
+here exactly as the unsharded batch would. Each shard therefore issues
+its own per-shard kernel launches over its own candidates; no edge of
+any candidate's network ever crosses a device boundary, and no
+re-planning happens per shard (verified by the mesh-parity tests in
+``tests/test_family_exec.py``).
+
 Backend selection (same contract as the other kernel packages):
   'pallas'    — real TPU lowering (target hardware)
   'interpret' — Pallas interpret mode (CPU correctness validation)

@@ -2,10 +2,22 @@
 
 A FUNCTION, not a module-level constant: importing this module never
 touches jax device state.
+
+Two consumers share these meshes:
+
+  * the LM-serving scaffold (``distribution/sharding.py``) lays model
+    weights/caches over the full ``(data, model)`` mesh;
+  * the thermal family execution layer
+    (``distribution/family_exec.py``) reuses ``make_host_mesh`` to carry
+    the DSE candidate batch on the ``data`` axis — ``FamilyExecutor``
+    passes an int device count and gets the first k host devices, so
+    mesh-sharded sweeps and the serving scaffold agree on axis naming
+    and never drift apart.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,5 +28,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Small mesh over the FIRST ``data * model`` host devices (tests /
+    CPU examples / the thermal family executor).
+
+    Unlike ``jax.make_mesh`` this builds submeshes: on a host exposing 8
+    devices, ``make_host_mesh(data=2)`` is a valid 2-device mesh — which
+    is how the ``sharded_dse`` benchmark sweeps device counts within one
+    process."""
+    devs = jax.devices()
+    n = data * model
+    if n > len(devs):
+        raise ValueError(f"make_host_mesh(data={data}, model={model}) "
+                         f"needs {n} devices, host has {len(devs)}")
+    return jax.sharding.Mesh(
+        np.array(devs[:n]).reshape(data, model), ("data", "model"))

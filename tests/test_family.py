@@ -174,6 +174,18 @@ def test_family_solver_registry(fam16):
         build_family(fam16, "rc", solver="sparse_lu")
 
 
+def test_cg_family_transient_casts_params(fam16):
+    """Regression: the cg-tier family transient must cast params to the
+    model dtype inside the trace — an f32 model fed float64 params under
+    enable_x64 raised a lax.scan carry-dtype mismatch."""
+    with jax.experimental.enable_x64():
+        sim = build_family(fam16, "rc", solver="cg")  # dtype f32
+        params = fam16.sample_params(2, seed=12)      # float64 host draw
+        q = np.full((5, 2, 16), 2.0)
+        obs = np.asarray(sim.simulate_family(params, q, 0.01))
+    assert obs.shape == (5, 2, 16) and np.isfinite(obs).all()
+
+
 def test_transient_cross_solver_family(fam16):
     params = fam16.sample_params(3, seed=7)
     T, dt = 25, 0.01
@@ -201,6 +213,68 @@ def test_steady_degenerate_b1_cg(fam16):
         loop_dense = _loop_steady(fam16, params, q, dtype=jnp.float64)
     assert np.abs(temps - loop).max() < 1e-6
     assert np.abs(temps - loop_dense).max() < 1e-6
+
+
+def test_grad_peak_steady_through_numeric_phase():
+    """Differentiability regression (PR 5 satellite, groundwork for
+    gradient-based DSE): jax.grad of the peak steady temperature w.r.t.
+    placement/HTC/thickness family params must flow through the numeric
+    phase and match central finite differences — catches any
+    accidentally non-differentiable op sneaking into assembly."""
+    fam = PackageFamily(make_2p5d_package(16),
+                        params=("grid_offsets", "htc_top",
+                                "thickness:tim"))
+    q = np.full((16,), 3.0)
+    with jax.experimental.enable_x64():
+        sim = build_family(fam, "rc", dtype=jnp.float64)
+        p0 = jnp.asarray(fam.sample_params(1, seed=11)[0])
+
+        def peak(p):
+            return sim.peak_steady(p[None], q[None])[0]
+
+        g = np.asarray(jax.grad(peak)(p0))
+        assert g.shape == (fam.n_params,)
+        assert np.all(np.isfinite(g))
+        # hotter with worse cooling: dT/d(htc_top) < 0, and squeezing the
+        # TIM (better conduction to the lid) also cools the peak
+        i_htc = fam.param_names.index("htc_top")
+        i_tim = fam.param_names.index("thickness:tim")
+        assert g[i_htc] < 0 and g[i_tim] > 0
+        # central finite differences over every parameter class
+        for k in (0, i_htc, i_tim):
+            h = max(1e-7 * abs(float(p0[k])), 1e-9)
+            fd = (peak(p0.at[k].add(h)) - peak(p0.at[k].add(-h))) / (2 * h)
+            assert abs(g[k] - fd) <= 1e-4 * max(abs(fd), 1e-3), \
+                (fam.param_names[k], g[k], float(fd))
+
+
+def test_fvm_family_hoists_static_blocks():
+    """FVM throughput fix (PR 5 satellite): blocks that do not move with
+    any parameter are rasterized once on the host — scalar-only families
+    trace ZERO per-candidate rasterization — while results still match
+    the per-candidate voxelize loop."""
+    fam = PackageFamily(make_2p5d_package(4),
+                        params=("power_scale", "htc_top"))
+    sim = build_family(fam, "fvm")
+    assert len(sim.blocks) > 0 and len(sim._traced_blocks) == 0
+    # no masks -> no select ops in the per-candidate jaxpr at all
+    jaxpr = jax.make_jaxpr(sim._fields)(fam.base_params())
+    assert not any(e.primitive.name == "select_n" for e in jaxpr.eqns)
+    params = np.array([[1.0, fam.template.htc_top],
+                       [2.0, 0.5 * fam.template.htc_top]])
+    q = np.full((2, 4), 3.0)
+    temps = np.asarray(sim.observe_batch(
+        sim.steady_state_batch(params, q), params))
+    for b in range(2):
+        m = build(fam.instantiate(params[b]), "fvm")
+        loop = np.asarray(m.observe(m.steady_state(q[b] * params[b, 0])))
+        assert np.abs(temps[b] - loop).max() < 2e-3  # f32 CG class
+    # placement families keep the movers traced (and keep matching the
+    # loop — covered by test_fvm_family_matches_loop)
+    moving = build_family(
+        PackageFamily(make_2p5d_package(4), params=("grid_offsets",)),
+        "fvm")
+    assert len(moving._traced_blocks) == len(moving.blocks)
 
 
 def test_power_scale_and_ambient_params():

@@ -88,9 +88,13 @@ print(f"\n[ROM  ] {rom.r:4d} of {rom.n_full} states "
 
 # The solver tier: the same build() strings scale past the paper's
 # systems. solver="auto" keeps the exact dense Cholesky for small
-# networks and switches to the matrix-free CG path (Pallas COO
-# segment-sum matvec, no N x N matrix ever built) above the measured
-# crossover — here the 64-chiplet system picks it automatically.
+# networks and switches to the matrix-free CG path (no N x N matrix
+# ever built) above the measured crossover — here the 64-chiplet
+# system picks it automatically. Each CG iteration runs as ONE fused
+# kernel launch (kernels/fused_cg; cg_impl="auto" -> "fused" — pass
+# cg_impl="unfused" to build(...) for the historical one-op-per-piece
+# composition), and every solve reports iterations / final relative
+# residual / a converged flag.
 from repro.core import make_2p5d_package as _mk  # noqa: E402
 
 big = _mk(64)
@@ -102,3 +106,8 @@ for solver in ("dense", "auto"):
     print(f"[solver] 2p5d_64 ({sim.net.n} nodes) solver={solver!r:8s}"
           f" -> {sim.solver:5s} steady peak {peak:6.1f} C "
           f"in {time.time()-t0:5.2f}s")
+st = sim.last_cg_stats
+if st is not None:
+    print(f"[solver] cg steady stats: {int(st.iterations)} fused "
+          f"iterations, residual {float(st.residual):.1e}, "
+          f"converged={bool(st.converged)}")

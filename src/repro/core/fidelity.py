@@ -153,12 +153,16 @@ def evict_stale_jits(cache: Dict, prefix: str = "simulate",
 # ``sparse_solver`` section of ``benchmarks/exec_time.py`` on this
 # container's CPU (which emits a calibration WARNING whenever this
 # constant drifts >2x from the fresh measurement — the guard that keeps
-# "auto" honest across hardware and solver changes). With the
-# mixed-precision refined CG steady solve (f64 accuracy without x64) the
-# interpolated ``steady_crossover_nodes`` lands at ~2.0k: CG pays ~3
-# refinement passes, dense is 1.6x behind by 2.1k nodes and 6.6x behind
-# by 8.2k. ``solver="auto"`` picks CG at or above this.
-SOLVER_CROSSOVER_NODES = 2000
+# "auto" honest across hardware and solver changes). The fused CG-step
+# path (``kernels/fused_cg``, one launch per iteration; PR 6) removed
+# the per-iteration dispatch cost that made small systems dense
+# territory: refined fused-CG steady now beats the dense Cholesky ~4x
+# already at 564 nodes (the smallest Table-6 system, the floor of the
+# measured ladder — the true crossover lies somewhere below), ~30x at
+# 2.1k and >200x at 8.2k, so ``steady_crossover_nodes`` reports the
+# ladder floor. ``solver="auto"`` picks CG at or above this; the dense
+# tier below it stays exact, prefactored, and reverse-differentiable.
+SOLVER_CROSSOVER_NODES = 564
 
 _SOLVERS = ("dense", "cg", "auto")
 

@@ -29,6 +29,9 @@ import numpy as np
 
 from ..distribution.family_exec import FamilyExecutor
 from ..kernels.coo_matvec.ops import coo_matvec, coo_plan, coo_segment_sum
+from ..kernels.fused_cg.ops import (CGStats, fused_cg_plan, fused_cg_solve,
+                                    pcg_loop, resolve_cg_impl,
+                                    warn_unconverged)
 from .assembly import NumericAssembly, adjacency_within, overlap_between
 from .fidelity import (register_family_fidelity, register_fidelity,
                        resolve_solver, simulate_batch_via_vmap)
@@ -248,6 +251,19 @@ class ThermalRCModel:
                   without JAX_ENABLE_X64; opt out with refine_passes=0.
       'auto'    — 'cg' at or above the measured crossover node count
                   (``fidelity.SOLVER_CROSSOVER_NODES``), else 'dense'.
+
+    cg_impl (how a CG iteration executes, orthogonal to the tier):
+      'fused'   — the whole PCG iteration (matvec, Jacobi apply,
+                  reductions, axpys) is one ``kernels/fused_cg`` step:
+                  a single Pallas launch on TPU, a single gather-only
+                  ELL ``while_loop`` body on CPU.
+      'unfused' — the historical one-op-per-piece composition
+                  (``segment_sum`` matvec), kept as the escape hatch and
+                  the benchmark A/B contrast.
+      'auto'    — 'fused' (the default everywhere).
+    Every CG solve records per-solve convergence stats; see
+    ``last_cg_stats`` and the ``last_stats`` attribute on the closures
+    returned by :meth:`make_steady_solver` / :meth:`make_simulator`.
     """
 
     fidelity = "rc"
@@ -255,7 +271,7 @@ class ThermalRCModel:
     def __init__(self, net: RCNetwork, dtype=jnp.float32,
                  method: str = "be_chol", solver: str = "dense",
                  cg_tol: Optional[float] = None, cg_maxiter: int = 1000,
-                 matvec_backend: str = "auto",
+                 matvec_backend: str = "auto", cg_impl: str = "auto",
                  refine_rtol: float = 1e-9, refine_passes: int = 4):
         self.net = net
         self.dtype = dtype
@@ -274,8 +290,11 @@ class ThermalRCModel:
         # even on the dense tier)
         self._plan = coo_plan(net.rows, net.cols, net.n)
         self._backend = matvec_backend
+        self.cg_impl = resolve_cg_impl(cg_impl)
         self._gvals = jnp.asarray(net.gvals, dtype)
         self._gdiag = jnp.asarray(-net.neg_g_diag(), dtype)
+        self._fused_plan_cache = None  # fused-CG plan, built lazily
+        self.last_cg_stats: Optional[CGStats] = None
         # steady-solve CG controls; f32 runs to its residual floor, so the
         # default tolerance is tier-appropriate rather than aspirational
         self.cg_tol = cg_tol if cg_tol is not None else \
@@ -293,6 +312,15 @@ class ThermalRCModel:
         if self._G is None:
             self._G = jnp.asarray(self.net.g_dense(), self.dtype)
         return self._G
+
+    @property
+    def _fused_plan(self):
+        """Fused-CG plan (RCM ordering, windowed tiles, ELL arrays) —
+        built on first CG solve only; the dense tier never pays it."""
+        if self._fused_plan_cache is None:
+            self._fused_plan_cache = fused_cg_plan(
+                self.net.rows, self.net.cols, self.net.n)
+        return self._fused_plan_cache
 
     # -- matrix-free G @ theta ----------------------------------------------
     def _gmatvec(self, theta):
@@ -320,22 +348,23 @@ class ThermalRCModel:
         CG. The refined solve returns a float64 numpy theta that agrees
         with the f64 dense tier to <=1e-6 degC WITHOUT ``JAX_ENABLE_X64``
         — ``observe`` keeps such states on the host f64 path end to end.
+
+        Either closure records a :class:`CGStats` on itself as
+        ``.last_stats`` after each concrete call (device iteration count,
+        final relative residual, ``converged``) and warns host-side when
+        the solve hit the iteration cap.
         """
-        plan, gvals, gdiag = self._plan, self._gvals, self._gdiag
-        dtype, backend = self.dtype, self._backend
+        gvals, gdiag = self._gvals, self._gdiag
+        dtype, backend, impl = self.dtype, self._backend, self.cg_impl
         tol, maxiter = self.cg_tol, self.cg_maxiter
         neg_diag = -gdiag
+        plan_f = self._fused_plan
 
         @jax.jit
         def solve_dev(rhs):  # (-G) x = rhs by Jacobi-PCG, device dtype
-            def mv(x):
-                return neg_diag * x - coo_matvec(plan, gvals, x,
-                                                 backend=backend)
-
-            sol, _ = jax.scipy.sparse.linalg.cg(
-                mv, rhs, tol=tol, maxiter=maxiter,
-                M=lambda x: x / neg_diag)
-            return sol
+            return fused_cg_solve(plan_f, neg_diag, gvals, rhs,
+                                  tol=tol, maxiter=maxiter,
+                                  impl=impl, backend=backend)
 
         p_dev = self.P
 
@@ -346,7 +375,15 @@ class ThermalRCModel:
         if refine is None:  # refine_passes=0 opts out of refinement
             refine = dtype != jnp.float64 and self.refine_passes > 0
         if not refine:
-            return steady_dev
+            def steady_plain(q_src):
+                sol, stats = steady_dev(q_src)
+                if not isinstance(sol, jax.core.Tracer):
+                    steady_plain.last_stats = stats
+                    warn_unconverged(stats, "rc steady CG")
+                return sol
+
+            steady_plain.last_stats = None
+            return steady_plain
 
         # host float64 side: residuals via the network's O(E) COO matvec
         net = self.net
@@ -360,14 +397,26 @@ class ThermalRCModel:
             rhs = p64 @ np.asarray(q_src, np.float64)
             bnorm = np.linalg.norm(rhs) or 1.0
             x = np.zeros(net.n)
+            iters = 0
             for _ in range(max_passes):
                 res = rhs - net.neg_g_matvec(x)
                 if np.linalg.norm(res) <= rtol * bnorm:
                     break
-                x = x + np.asarray(solve_dev(jnp.asarray(res, dtype)),
-                                   np.float64)
+                corr, st = solve_dev(jnp.asarray(res, dtype))
+                iters += int(np.asarray(st.iterations))
+                x = x + np.asarray(corr, np.float64)
+            # stats in the refined solve's own terms: total device CG
+            # iterations across passes, final HOST f64 relative residual,
+            # convergence against the refinement target
+            rel = np.linalg.norm(rhs - net.neg_g_matvec(x)) / bnorm
+            stats = CGStats(iterations=np.int32(iters),
+                            residual=np.float64(rel),
+                            converged=np.bool_(rel <= rtol))
+            steady.last_stats = stats
+            warn_unconverged(stats, "rc refined steady CG")
             return x
 
+        steady.last_stats = None
         return steady
 
     def steady_state(self, q_src):
@@ -378,7 +427,9 @@ class ThermalRCModel:
         if self.solver == "cg":
             if not hasattr(self, "_steady_fn"):
                 self._steady_fn = self.make_steady_solver()
-            return self._steady_fn(q_src)
+            sol = self._steady_fn(q_src)
+            self.last_cg_stats = self._steady_fn.last_stats
+            return sol
         rhs = self.P @ jnp.asarray(q_src, self.dtype)
         return jnp.linalg.solve(-self.G, rhs)
 
@@ -407,19 +458,25 @@ class ThermalRCModel:
                 rhs = C / dt * theta + P @ q
                 return jax.scipy.linalg.cho_solve(chol, rhs)
         elif method == "be_cg":
+            # backward Euler, matrix-free: (C/dt - G) th' = C/dt th + P q
+            # = diag(C/dt - gdiag) - offdiag(gvals), one fused CG step per
+            # iteration (kernels/fused_cg)
             cdt = C / dt
             diag = cdt - self._gdiag
-            gm = self._gmatvec
+            plan_f, gvals = self._fused_plan, self._gvals
+            impl, backend = self.cg_impl, self._backend
+            tol = min(self.cg_tol, 1e-8)
 
-            def mv(x):
-                return cdt * x - gm(x)
+            def step_stats(theta, q):
+                rhs = cdt * theta + P @ q
+                return fused_cg_solve(plan_f, diag, gvals, rhs, x0=theta,
+                                      tol=tol, maxiter=200,
+                                      impl=impl, backend=backend)
 
             def step(theta, q):
-                rhs = cdt * theta + P @ q
-                sol, _ = jax.scipy.sparse.linalg.cg(
-                    mv, rhs, x0=theta, tol=min(self.cg_tol, 1e-8),
-                    maxiter=200, M=lambda x: x / diag)
-                return sol
+                return step_stats(theta, q)[0]
+
+            step.with_stats = step_stats
         elif method == "be_lu":
             M = jnp.diag(C / dt) - self.G
 
@@ -435,20 +492,27 @@ class ThermalRCModel:
                 return jnp.linalg.solve(Ml, rhs)
         elif method == "trap_cg":
             # trapezoidal, matrix-free: (C/dt - G/2) th' = (C/dt + G/2) th
-            # + P q, the left side solved by Jacobi-preconditioned CG
+            # + P q; the left side is diag(C/dt - gdiag/2) -
+            # offdiag(gvals/2), solved by the fused CG step; the explicit
+            # right side reuses the plain COO matvec (one op per step)
             cdt = C / dt
             diag = cdt - 0.5 * self._gdiag
+            plan_f = self._fused_plan
+            gvals_half = 0.5 * self._gvals
+            impl, backend = self.cg_impl, self._backend
             gm = self._gmatvec
+            tol = min(self.cg_tol, 1e-8)
 
-            def mv(x):
-                return cdt * x - 0.5 * gm(x)
+            def step_stats(theta, q):
+                rhs = cdt * theta + 0.5 * gm(theta) + P @ q
+                return fused_cg_solve(plan_f, diag, gvals_half, rhs,
+                                      x0=theta, tol=tol, maxiter=200,
+                                      impl=impl, backend=backend)
 
             def step(theta, q):
-                rhs = cdt * theta + 0.5 * gm(theta) + P @ q
-                sol, _ = jax.scipy.sparse.linalg.cg(
-                    mv, rhs, x0=theta, tol=min(self.cg_tol, 1e-8),
-                    maxiter=200, M=lambda x: x / diag)
-                return sol
+                return step_stats(theta, q)[0]
+
+            step.with_stats = step_stats
         elif method == "rk4":
             # Gershgorin bound on |lambda|_max of C^-1 G -> substep count
             if self.solver == "cg":  # O(E) bound; no dense materialization
@@ -491,23 +555,42 @@ class ThermalRCModel:
         return step
 
     def make_simulator(self, dt: float, method: Optional[str] = None):
-        """Return jitted simulate(theta0, q_traj[T,S]) -> obs_temps[T,n_obs].
+        """Return simulate(theta0, q_traj[T,S]) -> obs_temps[T,n_obs]
+        (the device part is jitted internally; the closure is vmappable).
 
         Output is absolute temperature at the chiplet observation points.
+        For the matrix-free integrators (be_cg/trap_cg) the per-step CG
+        stats accumulate inside the scan and land on the closure as
+        ``simulate.last_stats`` (a (T,)-shaped :class:`CGStats`) after
+        each concrete call, with a host-side warning if any step's solve
+        hit the iteration cap.
         """
         step = self.make_stepper(dt, method)
+        step_stats = getattr(step, "with_stats", None)
         H = self.H
         t_amb = self.t_ambient
 
         @jax.jit
-        def simulate(theta0, q_traj):
+        def simulate_dev(theta0, q_traj):
             def body(theta, q):
-                th = step(theta, q.astype(theta.dtype))
-                return th, H @ th
+                if step_stats is None:
+                    th = step(theta, q.astype(theta.dtype))
+                    return th, (H @ th, None)
+                th, st = step_stats(theta, q.astype(theta.dtype))
+                return th, (H @ th, st)
 
-            _, obs = jax.lax.scan(body, theta0.astype(self.dtype), q_traj)
-            return obs + t_amb
+            _, (obs, stats) = jax.lax.scan(body, theta0.astype(self.dtype),
+                                           q_traj)
+            return obs + t_amb, stats
 
+        def simulate(theta0, q_traj):
+            obs, stats = simulate_dev(theta0, q_traj)
+            if stats is not None and not isinstance(obs, jax.core.Tracer):
+                simulate.last_stats = stats
+                warn_unconverged(stats, "rc transient CG")
+            return obs
+
+        simulate.last_stats = None
         return simulate
 
     def simulate_batch(self, theta0, q_traj, dt: float,
@@ -547,21 +630,23 @@ def _resolve_cap_multipliers(pkg: Package,
 def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
                 dtype=jnp.float32, method: str = "be_chol",
                 solver: str = "dense", cg_tol: Optional[float] = None,
-                cg_maxiter: int = 1000, refine_rtol: float = 1e-9,
-                refine_passes: int = 4,
+                cg_maxiter: int = 1000, cg_impl: str = "auto",
+                refine_rtol: float = 1e-9, refine_passes: int = 4,
                 grid: Optional[NodeGrid] = None) -> ThermalRCModel:
     """Registry builder. ``cap_multipliers=None`` applies the tuned
     per-layer defaults for the package's layer stack (override with an
     explicit dict, or pass ``{}`` for the untuned network). ``solver``
-    selects the solver tier and ``refine_rtol``/``refine_passes`` the
-    mixed-precision refinement of its f32 cg steady solve
-    (``refine_passes=0`` opts out; see :class:`ThermalRCModel`)."""
+    selects the solver tier, ``cg_impl`` how its CG iterations execute
+    ("fused" single-launch kernel vs "unfused" escape hatch), and
+    ``refine_rtol``/``refine_passes`` the mixed-precision refinement of
+    its f32 cg steady solve (``refine_passes=0`` opts out; see
+    :class:`ThermalRCModel`)."""
     return ThermalRCModel(
         build_network(pkg, grid=grid,
                       cap_multipliers=_resolve_cap_multipliers(
                           pkg, cap_multipliers)),
         dtype=dtype, method=method, solver=solver, cg_tol=cg_tol,
-        cg_maxiter=cg_maxiter, refine_rtol=refine_rtol,
+        cg_maxiter=cg_maxiter, cg_impl=cg_impl, refine_rtol=refine_rtol,
         refine_passes=refine_passes)
 
 
@@ -571,43 +656,14 @@ def build_model(pkg: Package, cap_multipliers: Optional[dict] = None,
 def _batched_pcg(matvec, prec, rhs, x0, tol: float, maxiter: int):
     """Masked batched preconditioned CG on SPD systems ``A x = rhs``.
 
-    ``matvec``/``prec`` map (B, N) -> (B, N); batch rows converge
-    independently against a RELATIVE residual ``tol`` and are frozen
-    (masked updates) while the rest iterate. Shared by the family steady
-    solve (template preconditioner) and the matrix-free family transient
-    (Jacobi preconditioner).
+    Back-compat wrapper around :func:`repro.kernels.fused_cg.ops.pcg_loop`
+    (the generic callable-matvec loop, which also returns per-row
+    :class:`CGStats`); kept because external consumers (``core/rom.py``)
+    import the x-only form. ``matvec``/``prec`` map (B, N) -> (B, N);
+    batch rows converge independently against a RELATIVE residual ``tol``
+    and are frozen (masked updates) while the rest iterate.
     """
-    bnorm = jnp.linalg.norm(rhs, axis=1)
-    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
-    tol = jnp.asarray(tol, rhs.dtype)
-
-    def active(r):
-        return jnp.linalg.norm(r, axis=1) / bnorm > tol
-
-    def cond(state):
-        it, _, r, _, _ = state
-        return (it < maxiter) & jnp.any(active(r))
-
-    def body(state):
-        it, x, r, p, rz = state
-        ap = matvec(p)
-        live = active(r)
-        denom = jnp.sum(p * ap, axis=1)
-        alpha = jnp.where(live, rz / jnp.where(denom == 0, 1.0, denom),
-                          0.0)
-        x = x + alpha[:, None] * p
-        r = r - alpha[:, None] * ap
-        z = prec(r)
-        rz_new = jnp.sum(r * z, axis=1)
-        beta = jnp.where(live, rz_new / jnp.where(rz == 0, 1.0, rz),
-                         0.0)
-        p = z + beta[:, None] * p
-        return it + 1, x, r, p, rz_new
-
-    r0 = rhs - matvec(x0)
-    z0 = prec(r0)
-    state = (jnp.asarray(0), x0, r0, z0, jnp.sum(r0 * z0, axis=1))
-    return jax.lax.while_loop(cond, body, state)[1]
+    return pcg_loop(matvec, prec, rhs, x0, tol, maxiter)[0]
 
 
 class RCFamilyModel:
@@ -617,13 +673,16 @@ class RCFamilyModel:
     every method then evaluates a ``(B, P)`` parameter batch as a pure-jax
     numeric phase (``core/assembly.py``) plus a batched solve:
 
-      * ``steady_state_batch`` — template-preconditioned CG: the SPD
-        steady matrix ``-G(p)`` is preconditioned with the Cholesky factor
-        of the TEMPLATE's ``-G(p0)``, factored once on the host. Each
-        iteration is one shared BLAS-3 triangular-solve pair over the
-        whole batch plus an O(E) COO matvec per candidate — no O(N^3)
-        factorization per candidate, which is what makes the batched sweep
-        beat a per-package ``build()`` loop by an order of magnitude.
+      * ``steady_state_batch`` — batched CG on the SPD steady matrix
+        ``-G(p)``. On the default "dense" tier it is preconditioned with
+        the Cholesky factor of the TEMPLATE's ``-G(p0)``, factored once
+        on the host: each iteration is one shared BLAS-3
+        triangular-solve pair over the whole batch plus an O(E) COO
+        matvec per candidate — no O(N^3) factorization per candidate,
+        which is what makes the batched sweep beat a per-package
+        ``build()`` loop by an order of magnitude. On the "cg" tier the
+        solve is fully matrix-free: every iteration is ONE fused
+        Jacobi-PCG step (``kernels/fused_cg``) over the whole batch.
       * ``simulate_family`` — per-candidate backward Euler. On the
         default "dense" solver tier, one batched Cholesky of
         ``C/dt - G(p)`` amortized over all T steps; on the "cg" tier the
@@ -647,7 +706,8 @@ class RCFamilyModel:
     def __init__(self, family, cap_multipliers: Optional[dict] = None,
                  dtype=jnp.float32, cg_tol: Optional[float] = None,
                  cg_maxiter: int = 150, solver: str = "dense",
-                 mesh=None, chunk_size: Optional[int] = None,
+                 cg_impl: str = "auto", mesh=None,
+                 chunk_size: Optional[int] = None,
                  executor: Optional[FamilyExecutor] = None):
         self.family = family
         self.exec = executor if executor is not None else \
@@ -668,6 +728,9 @@ class RCFamilyModel:
             (1e-9 if dtype == jnp.float64 else 1e-6)
         self.cg_maxiter = cg_maxiter
         self.solver = resolve_solver(solver, family.sym.n)
+        self.cg_impl = resolve_cg_impl(cg_impl)
+        self._fused_plan_cache = None
+        self.last_cg_stats: Optional[CGStats] = None
         self._cbase = jnp.asarray(family.coord_base, dtype)
         self._cjac = jnp.asarray(family.coord_jac, dtype)
         self._slots = family.scalar_slots
@@ -692,6 +755,17 @@ class RCFamilyModel:
     @property
     def n(self) -> int:
         return self.num.sym.n
+
+    @property
+    def _fused_plan(self):
+        """Fused-CG plan over the family's FIXED symbolic edge pattern —
+        shared by every candidate (the batch rides the kernel's sublane
+        axis), built lazily on the first matrix-free solve."""
+        if self._fused_plan_cache is None:
+            sym = self.num.sym
+            self._fused_plan_cache = fused_cg_plan(sym.rows, sym.cols,
+                                                   sym.n)
+        return self._fused_plan_cache
 
     # -- traced numeric phase ------------------------------------------------
     def _scalar(self, p, name):
@@ -743,16 +817,27 @@ class RCFamilyModel:
         return np.asarray(self.family.base_params())
 
     def _pcg(self, gvals, gconv, rhs, x0):
-        """Batched PCG on (-G(p)) x = rhs, shared template preconditioner.
+        """Batched PCG on (-G(p)) x = rhs -> (x (B, N), CGStats (B,)).
 
-        gvals (B, E_sym), gconv (B, N), rhs (B, N), x0 (B, N) -> x (B, N).
-        The matvec is the shared COO segment-sum kernel with the batch
-        riding its GEMM sublane axis (no vmap); the preconditioner is one
-        BLAS-3 triangular-solve pair over the whole batch. ``x0`` is the
-        warm start the executor threads across streamed chunks.
+        gvals (B, E_sym), gconv (B, N), rhs (B, N), x0 (B, N). On the
+        "cg" tier the whole iteration is one fused CG step
+        (``kernels/fused_cg``, Jacobi preconditioner — fully matrix-free,
+        no O(N^2) template factor; the cap is raised to cover Jacobi's
+        higher iteration count at family tolerances). On the "dense" tier
+        the template preconditioner is kept: the Cholesky factor of the
+        TEMPLATE's ``-G(p0)``, one BLAS-3 triangular-solve pair over the
+        whole batch per iteration — dense-memory-class but far fewer
+        iterations. ``x0`` is the warm start the executor threads across
+        streamed chunks.
         """
         num = self.num
         diag = num.neg_g_diag(gvals, gconv)  # (B, N), batched natively
+        if self.solver == "cg":
+            return fused_cg_solve(self._fused_plan, diag, gvals, rhs,
+                                  x0=x0, tol=self.cg_tol,
+                                  maxiter=max(self.cg_maxiter, 1000),
+                                  impl=self.cg_impl,
+                                  backend=num.matvec_backend)
 
         def matvec(x):
             return diag * x - coo_matvec(num.plan, gvals, x,
@@ -763,8 +848,8 @@ class RCFamilyModel:
         def prec(r):  # one BLAS-3 triangular-solve pair for the batch
             return jax.scipy.linalg.cho_solve((chol0, True), r.T).T
 
-        return _batched_pcg(matvec, prec, rhs, x0,
-                            self.cg_tol, self.cg_maxiter)
+        return pcg_loop(matvec, prec, rhs, x0,
+                        self.cg_tol, self.cg_maxiter)
 
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
         """params (B, P), q_src (B, S) -> steady theta (B, N).
@@ -772,7 +857,10 @@ class RCFamilyModel:
         Natively batched through the executor: candidates shard over the
         mesh, and chunk-streamed sweeps warm-start each chunk's CG from
         the previous chunk's converged states (placements in one sweep
-        are thermally similar, so the carry saves iterations)."""
+        are thermally similar, so the carry saves iterations). Per-solve
+        convergence stats land on ``self.last_cg_stats`` (a (B,)-shaped
+        :class:`CGStats`), with a host-side warning when any candidate's
+        solve hit the iteration cap."""
         def _steady(x0, params, q):
             def net(p):
                 v = self._network(p)
@@ -782,14 +870,18 @@ class RCFamilyModel:
                 params.astype(self.dtype))
             rhs = jnp.einsum("bns,bs->bn", pmat,
                              q.astype(self.dtype) * scale[:, None])
-            th = self._pcg(gvals, gconv, rhs, x0)
-            return th, th
+            th, stats = self._pcg(gvals, gconv, rhs, x0)
+            return (th, stats), th
 
-        return self.exec.run(
+        th, stats = self.exec.run(
             f"{self._ns}:rc_steady", _steady, (params, q_src),
             in_axes=(0, 0),
             out_axis=0, pad_rows=(self._pad_param_row, None),
             make_carry=lambda b: jnp.zeros((b, self.n), self.dtype))
+        if not isinstance(th, jax.core.Tracer):
+            self.last_cg_stats = stats
+            warn_unconverged(stats, "rc family steady CG")
+        return th
 
     def observe_batch(self, theta, params) -> jnp.ndarray:
         """theta (B, N), params (B, P) -> absolute degC (B, n_obs)."""
@@ -865,11 +957,16 @@ class RCFamilyModel:
 
     def _make_simulate_cg(self, dt: float):
         """Matrix-free family transient: backward Euler where each step
-        is one batched Jacobi-CG solve of ``(C/dt - G(p)) th' = rhs``,
+        is one batched Jacobi-CG solve of ``(C/dt - G(p)) th' = rhs``
+        executed as fused CG-step launches (``kernels/fused_cg``),
         warm-started from the previous state (params, q_traj as in
-        :meth:`simulate_family`)."""
+        :meth:`simulate_family`). Per-step stats stay inside the scan
+        (the executor's time-major output layout has no room for them);
+        steady solves are where convergence is observable."""
         num = self.num
         tol, maxiter = self.cg_tol, self.cg_maxiter
+        impl, backend = self.cg_impl, num.matvec_backend
+        plan_f = self._fused_plan
 
         def simulate(params, q_traj):
             def net(p):
@@ -883,18 +980,13 @@ class RCFamilyModel:
             neg_g_diag = num.neg_g_diag(gvals, gconv)   # (B, N)
             mdiag = cdt + neg_g_diag                    # diag of C/dt - G
 
-            def matvec(x):
-                return mdiag * x - coo_matvec(num.plan, gvals, x,
-                                              backend=num.matvec_backend)
-
-            def prec(r):
-                return r / mdiag
-
             def body(th, qt):  # th (B, N), qt (B, S)
                 rhs = cdt * th + jnp.einsum(
                     "bns,bs->bn", pmat,
                     qt.astype(self.dtype) * scale[:, None])
-                th = _batched_pcg(matvec, prec, rhs, th, tol, maxiter)
+                th, _ = fused_cg_solve(plan_f, mdiag, gvals, rhs, x0=th,
+                                       tol=tol, maxiter=maxiter,
+                                       impl=impl, backend=backend)
                 return th, jnp.einsum("bon,bn->bo", h, th)
 
             th0 = jnp.zeros((params.shape[0], self.n), self.dtype)

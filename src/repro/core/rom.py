@@ -56,12 +56,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.coo_matvec.ops import coo_matvec, coo_plan
+from ..kernels.fused_cg.ops import (fused_cg_plan, fused_cg_solve,
+                                    warn_unconverged)
 from .dss import family_zoh_simulate, zoh_discretize
 from .fidelity import (evict_stale_jits, register_family_fidelity,
                        register_fidelity, resolve_solver)
 from .geometry import NodeGrid, Package
-from .rc_model import (RCFamilyModel, RCNetwork, _batched_pcg,
+from .rc_model import (RCFamilyModel, RCNetwork,
                        _resolve_cap_multipliers, build_network,
                        observation_matrix)
 
@@ -76,14 +77,17 @@ _DROP_TOL = 1e-8
 
 def _make_neg_g_solver(net: RCNetwork, solver: str,
                        cg_tol: float = 1e-10, cg_maxiter: int = 5000,
-                       matvec_backend: str = "auto"):
+                       matvec_backend: str = "auto",
+                       cg_impl: str = "auto"):
     """Block solver ``B (N, k) -> (-G)^-1 B`` in float64 (host in/out).
 
     "dense": one host Cholesky of -G, reused for every block.
-    "cg": matrix-free Jacobi-preconditioned block CG on the O(E) COO
-    segment-sum kernel — the dense G is never formed. Runs in f64 on
-    device (the one-time construction wraps itself in ``enable_x64``;
-    runtime never needs it).
+    "cg": matrix-free block CG where each iteration over the whole block
+    is one fused Jacobi-PCG step (``kernels/fused_cg``; the block rides
+    the kernel's batch axis) — the dense G is never formed. Runs in f64
+    on device (the one-time construction wraps itself in ``enable_x64``;
+    runtime never needs it). ``cg_impl="unfused"`` is the historical
+    one-op-per-piece escape hatch.
     """
     if solver == "dense":
         import scipy.linalg as sla
@@ -92,22 +96,20 @@ def _make_neg_g_solver(net: RCNetwork, solver: str,
 
     neg_diag = net.neg_g_diag()
     with jax.experimental.enable_x64():
-        plan = coo_plan(net.rows, net.cols, net.n)
+        plan = fused_cg_plan(net.rows, net.cols, net.n)
         gvals = jnp.asarray(net.gvals, jnp.float64)
         diag = jnp.asarray(neg_diag, jnp.float64)
 
-        def mv(x):  # x (k, N) -> (-G) x rows
-            return diag * x - coo_matvec(plan, gvals, x,
-                                         backend=matvec_backend)
-
         @jax.jit
-        def solve(rhs):  # (k, N)
-            return _batched_pcg(mv, lambda r: r / diag, rhs,
-                                jnp.zeros_like(rhs), cg_tol, cg_maxiter)
+        def solve(rhs):  # (k, N) block on the fused kernel's batch axis
+            return fused_cg_solve(plan, diag, gvals, rhs,
+                                  tol=cg_tol, maxiter=cg_maxiter,
+                                  impl=cg_impl, backend=matvec_backend)
 
     def solve_block(b):
         with jax.experimental.enable_x64():
-            out = solve(jnp.asarray(np.ascontiguousarray(b.T)))
+            out, stats = solve(jnp.asarray(np.ascontiguousarray(b.T)))
+            warn_unconverged(stats, "rom basis block CG")
             return np.asarray(out, np.float64).T
 
     return solve_block
@@ -116,7 +118,8 @@ def _make_neg_g_solver(net: RCNetwork, solver: str,
 def krylov_basis(net: RCNetwork, r: Optional[int] = None,
                  n_moments: int = DEFAULT_MOMENTS, solver: str = "auto",
                  drop_tol: float = _DROP_TOL, cg_tol: float = 1e-10,
-                 cg_maxiter: int = 5000) -> np.ndarray:
+                 cg_maxiter: int = 5000,
+                 cg_impl: str = "auto") -> np.ndarray:
     """C-orthonormal block-Krylov basis V (N, r) matching block moments
     of ``H (sC - G)^-1 P`` around s = 0 (PRIMA-style, host float64).
 
@@ -135,7 +138,8 @@ def krylov_basis(net: RCNetwork, r: Optional[int] = None,
     n = net.n
     solver = resolve_solver(solver, n)
     solve_block = _make_neg_g_solver(net, solver, cg_tol=cg_tol,
-                                     cg_maxiter=cg_maxiter)
+                                     cg_maxiter=cg_maxiter,
+                                     cg_impl=cg_impl)
     c_diag = np.asarray(net.C, np.float64)
     r_cap = n if r is None else min(int(r), n)
     if r is not None and r_cap < 1:
@@ -346,6 +350,7 @@ def build_rom(pkg: Package, r: Optional[int] = None,
               cap_multipliers: Optional[dict] = None,
               basis: Optional[np.ndarray] = None,
               cg_tol: float = 1e-10, cg_maxiter: int = 5000,
+              cg_impl: str = "auto",
               grid: Optional[NodeGrid] = None) -> ROMModel:
     """Registry builder: package -> RC network -> Krylov basis -> ROM.
 
@@ -361,7 +366,8 @@ def build_rom(pkg: Package, r: Optional[int] = None,
                             pkg, cap_multipliers))
     if basis is None:
         basis = krylov_basis(net, r=r, n_moments=n_moments, solver=solver,
-                             cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+                             cg_tol=cg_tol, cg_maxiter=cg_maxiter,
+                             cg_impl=cg_impl)
     return ROMModel(net, basis, ts=ts, dtype=dtype)
 
 
@@ -392,9 +398,10 @@ class ROMFamilyModel:
                  cap_multipliers: Optional[dict] = None,
                  dtype=jnp.float32, basis: Optional[np.ndarray] = None,
                  solver: str = "auto", cg_tol: float = 1e-10,
-                 cg_maxiter: int = 5000, **rc_opts):
+                 cg_maxiter: int = 5000, cg_impl: str = "auto",
+                 **rc_opts):
         self.rcf = RCFamilyModel(family, cap_multipliers=cap_multipliers,
-                                 dtype=dtype, **rc_opts)
+                                 dtype=dtype, cg_impl=cg_impl, **rc_opts)
         self.family = family
         self.ts = ts
         self.dtype = dtype
@@ -408,7 +415,7 @@ class ROMFamilyModel:
             # as on the single-package build(pkg, "rom", ...) path
             basis = krylov_basis(net0, r=r, n_moments=n_moments,
                                  solver=solver, cg_tol=cg_tol,
-                                 cg_maxiter=cg_maxiter)
+                                 cg_maxiter=cg_maxiter, cg_impl=cg_impl)
         self.V = np.asarray(basis, np.float64)
         self._vd = jnp.asarray(self.V, dtype)
 

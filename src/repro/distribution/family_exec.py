@@ -248,7 +248,12 @@ class FamilyExecutor:
                        (batch axis 0) threads across chunks — the RC
                        steady CG warm start.
         in_axes:       per-arg candidate axis (None = not batched).
-        out_axis:      candidate axis of the (single-array) output.
+        out_axis:      candidate axis of the output. The output may be a
+                       PYTREE (e.g. ``(theta, CGStats)``); every leaf
+                       must carry the candidate batch on ``out_axis``
+                       (padding is sliced off, chunk streaming
+                       concatenates, and mesh sharding broadcasts the
+                       out spec, per leaf).
         pad_rows:      per-arg pad element used when B is padded up to
                        the shard/chunk grain (None = zeros). Family
                        models pass their template ``base_params()`` so
@@ -292,10 +297,17 @@ class FamilyExecutor:
             else:
                 out = jfn(*chunk_args)
             if n_chunks > 1:
-                out = np.asarray(out)  # stream: device holds ONE chunk
+                # stream: device holds ONE chunk (leaf-wise for pytrees)
+                out = jax.tree_util.tree_map(np.asarray, out)
             outs.append(out)
+
+        def unpad(tree):
+            return jax.tree_util.tree_map(
+                lambda leaf: self._slice(leaf, out_axis, 0, b), tree)
+
         if n_chunks == 1:
             out = outs[0]
-            return out if b_pad == b else self._slice(out, out_axis, 0, b)
-        out = np.concatenate(outs, axis=out_axis)
-        return out if b_pad == b else self._slice(out, out_axis, 0, b)
+            return out if b_pad == b else unpad(out)
+        out = jax.tree_util.tree_map(
+            lambda *leaves: np.concatenate(leaves, axis=out_axis), *outs)
+        return out if b_pad == b else unpad(out)

@@ -37,7 +37,12 @@ Measures, per system size and per registered fidelity:
     (``chunk_size=``), with speedup vs the single-device vmap path and
     the sweep's own RSS high-water (peak minus post-setup RSS) as the
     bounded-memory evidence. Each config runs in a subprocess so the
-    device-count flag can be set before jax initializes.
+    device-count flag can be set before jax initializes;
+  * the ``serving`` section (PR 7): the thermal-oracle service
+    (``repro.serving``) — cold-vs-warm content-addressed model build
+    time, warmed sequential p50/p99 latency for steady and ROM-transient
+    queries (the sub-ms headline), and threaded-storm throughput with
+    mean batch occupancy from the continuous batcher.
 
 All models are obtained through the fidelity registry. Results land in a
 machine-readable ``BENCH_exec_time.json`` at the repo root so the perf
@@ -570,6 +575,87 @@ def _check_crossover_calibration(measured: float) -> dict:
     return {"constant": const, "calibration_ok": bool(ok)}
 
 
+def bench_serving(system: str = "2p5d_16", n_requests: int = 200,
+                  t_steps: int = 50, storm: int = 64) -> dict:
+    """The thermal-oracle serving section (PR 7): cold-vs-warm build,
+    warmed sequential p50/p99 per request kind, threaded-storm
+    throughput and batch occupancy — the headline is sub-ms p50 steady
+    and ROM-transient answers against a warm content-addressed cache."""
+    import threading
+
+    from repro.serving import ThermalOracle
+
+    pkg, n_src, _ = _package(system)
+    oracle = ThermalOracle(fidelity="rom", capacity=8,
+                           max_queue=4 * storm)
+    _, hit_cold, cold_build_s = oracle.warm(pkg)
+    # a structurally identical, independently constructed geometry must
+    # be a pure cache hit — "warm build time" is just the key hash+lookup
+    pkg_again = _package(system)[0]
+    warm_lookup_s = _host_time(lambda: oracle.warm(pkg_again), reps=5)
+    assert oracle.warm(pkg_again)[1] is True
+
+    q = np.full(n_src, 3.0)
+    q_traj = np.full((t_steps, n_src), 2.0)
+    oracle.query_steady(pkg, q)                  # compile/warm the
+    oracle.query_transient(pkg, q_traj, 0.01)    # serving executables
+
+    def _lat(fn, n):
+        lats = []
+        for _ in range(n):
+            resp = fn()
+            assert resp.ok, resp.detail
+            lats.append(resp.latency_s)
+        arr = np.asarray(lats)
+        return {"n": n, "p50_s": float(np.percentile(arr, 50)),
+                "p99_s": float(np.percentile(arr, 99)),
+                "mean_s": float(arr.mean())}
+
+    lat_steady = _lat(lambda: oracle.query_steady(pkg, q), n_requests)
+    lat_tran = _lat(lambda: oracle.query_transient(pkg, q_traj, 0.01),
+                    max(n_requests // 4, 10))
+
+    # threaded storm: concurrent clients drive batching; throughput and
+    # occupancy are the continuous-batching payoff
+    responses = [None] * storm
+
+    def client(i):
+        responses[i] = oracle.query_steady(pkg, q)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(storm)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert all(r.ok for r in responses)
+    occ = float(np.mean([r.occupancy for r in responses]))
+    snap = oracle.telemetry.snapshot()
+    oracle.close()
+    out = {"system": system, "nodes_srcs": n_src, "capacity": 8,
+           "cold_build_s": cold_build_s,
+           "warm_lookup_s": warm_lookup_s,
+           "warm_speedup": cold_build_s / max(warm_lookup_s, 1e-9),
+           "steady": lat_steady,
+           "rom_transient": {"t_steps": t_steps, **lat_tran},
+           "storm": {"clients": storm, "wall_s": wall,
+                     "req_per_s": storm / wall,
+                     "mean_batch_occupancy": occ},
+           "cache": snap["cache"],
+           "by_status": snap["by_status"]}
+    print(f"[serving  ] {system}: cold build {cold_build_s:.2f}s -> "
+          f"warm lookup {warm_lookup_s*1e6:.0f}us "
+          f"({out['warm_speedup']:.0f}x); steady p50 "
+          f"{lat_steady['p50_s']*1e3:.2f}ms p99 "
+          f"{lat_steady['p99_s']*1e3:.2f}ms; rom-transient[{t_steps}] "
+          f"p50 {lat_tran['p50_s']*1e3:.2f}ms; storm {storm} clients "
+          f"{out['storm']['req_per_s']:.0f} req/s occ {occ:.2f}",
+          flush=True)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -590,6 +676,7 @@ def main(argv=None):
         rom_systems, rom_steps = ["2p5d_16"], 200
         dse_b = args.dse_b or 32
         sharded_kw = dict(b_scale=256, b_stream=1024, chunk=256, reps=2)
+        serving_kw = dict(n_requests=50, storm=32)
     else:
         sim_systems = ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"] \
             if args.full else ["2p5d_16", "3d_16x3"]
@@ -605,6 +692,7 @@ def main(argv=None):
         rom_steps = 400
         dse_b = args.dse_b or 128
         sharded_kw = dict(b_scale=2048, b_stream=10000, chunk=512, reps=3)
+        serving_kw = dict(n_requests=200, storm=64)
     assembly = [bench_assembly(s) for s in assembly_systems]
     systems = [run_system(s, n_steps) for s in sim_systems]
     sparse = [bench_sparse_solver(s) for s in sparse_systems]
@@ -623,6 +711,7 @@ def main(argv=None):
                                 "calibration_ok": None}
     rom = [bench_rom(s, n_steps=rom_steps) for s in rom_systems]
     sharded = bench_sharded_dse("2p5d_16", **sharded_kw)
+    serving = bench_serving("2p5d_16", **serving_kw)
     # last: the sweep runs (and traces) under x64
     dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
     results = {"bench": "exec_time", "full": bool(args.full),
@@ -635,6 +724,7 @@ def main(argv=None):
                             "steady_crossover_nodes": fused_crossover},
                "rom": rom,
                "sharded_dse": sharded,
+               "serving": serving,
                "dse_sweep": dse}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -666,6 +756,12 @@ def main(argv=None):
     for r in sharded["streamed"]:
         print(f"sharded,{sharded['system']},B{r['b']},dev{r['devices']},"
               f"chunk{r['chunk']},sweep_rss,{r['sweep_rss_mb']:.0f}MB")
+    print(f"serving,{serving['system']},steady_p50,"
+          f"{serving['steady']['p50_s']*1e6:.0f}us,transient_p50,"
+          f"{serving['rom_transient']['p50_s']*1e6:.0f}us,throughput,"
+          f"{serving['storm']['req_per_s']:.0f}req/s,occupancy,"
+          f"{serving['storm']['mean_batch_occupancy']:.2f},warm_speedup,"
+          f"{serving['warm_speedup']:.0f}x")
     return results
 
 

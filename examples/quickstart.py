@@ -111,3 +111,11 @@ if st is not None:
     print(f"[solver] cg steady stats: {int(st.iterations)} fused "
           f"iterations, residual {float(st.residual):.1e}, "
           f"converged={bool(st.converged)}")
+
+# Level 3 of the API: don't build models, ASK a service. The thermal
+# oracle (repro.serving, examples/thermal_service.py) keeps warm
+# content-addressed models behind a continuous-batched, deadline-aware
+# queue — concurrent steady/transient/DTPM queries answered on the ROM
+# rung in microseconds, repeat geometries skipping every one-time build.
+print("\nnext: PYTHONPATH=src python examples/thermal_service.py "
+      "(the always-on thermal-oracle service over this ladder)")

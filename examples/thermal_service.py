@@ -1,0 +1,116 @@
+"""Thermal-oracle serving walkthrough: the always-on query service over
+the fidelity ladder (PR 7).
+
+A DTPM runtime or design-space optimizer doesn't want to ``build()`` a
+model per question — it wants to ASK: "steady temps for this power
+vector", "will this trace violate 85 C", "rank this candidate" — and get
+answers in microseconds against warm models. ``repro.serving`` is that
+layer: a persistent in-process oracle that content-addresses built
+models (repeat geometries skip discretization, assembly, and the ROM
+basis), coalesces concurrent queries into fixed-capacity batches (the
+continuous-batching idiom of ``launch/serve.py``, productionized in
+``serving/batcher.py``), enforces per-request deadlines, and answers
+every outcome — success, deadline miss, queue overflow, unconverged
+solve — as a structured response.
+
+Run:  PYTHONPATH=src python examples/thermal_service.py
+"""
+import threading
+import time
+
+import numpy as np
+
+from repro.core import PackageFamily, make_2p5d_package
+from repro.serving import ThermalOracle
+
+# ---------------------------------------------------------------------------
+# 1. stand up the service and warm the model cache
+# ---------------------------------------------------------------------------
+pkg = make_2p5d_package(16)
+oracle = ThermalOracle(fidelity="rom", capacity=8, default_deadline_s=30.0)
+
+t0 = time.perf_counter()
+key, hit, build_s = oracle.warm(pkg)            # one-time ROM build
+print(f"cold warm(): built in {build_s:.2f}s (hit={hit})")
+_, hit, _ = oracle.warm(make_2p5d_package(16))  # structurally identical
+print(f"warm warm(): content-addressed hit={hit} "
+      f"(an independently constructed but identical geometry shares "
+      f"the model)")
+
+# ---------------------------------------------------------------------------
+# 2. a storm of concurrent steady queries from client threads
+# ---------------------------------------------------------------------------
+rng = np.random.default_rng(0)
+N = 64
+responses = [None] * N
+
+
+def client(i):
+    q = rng.uniform(0.5, 4.0, 16)
+    responses[i] = oracle.query_steady(make_2p5d_package(16), q)
+
+
+threads = [threading.Thread(target=client, args=(i,)) for i in range(N)]
+t0 = time.perf_counter()
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+wall = time.perf_counter() - t0
+lats = sorted(r.latency_s for r in responses)
+print(f"\n{N} concurrent steady queries in {wall*1e3:.1f} ms wall "
+      f"({N/wall:.0f} req/s): p50 latency {lats[N//2]*1e3:.2f} ms, "
+      f"p99 {lats[int(N*0.99)]*1e3:.2f} ms, all "
+      f"{'ok' if all(r.ok for r in responses) else 'NOT ok'}, "
+      f"every one a cache hit: {all(r.cache_hit for r in responses)}")
+
+# ---------------------------------------------------------------------------
+# 3. transient traces coalesce into one fixed-capacity batched rollout
+# ---------------------------------------------------------------------------
+q_traj = np.tile(rng.uniform(0.5, 3.0, 16), (200, 1))
+pends = [oracle.submit_transient(make_2p5d_package(16), q_traj, 0.01)
+         for _ in range(8)]
+rs = [p.result() for p in pends]
+print(f"\n8 transient requests (200 steps each): statuses "
+      f"{[r.status for r in rs]}, batch occupancy "
+      f"{[f'{r.occupancy:.2f}' for r in rs]} — same-shape requests "
+      f"ride ONE simulate_batch executable, padded slots recycled")
+
+# ---------------------------------------------------------------------------
+# 4. DTPM-in-the-loop: a control-trace query with runtime telemetry
+# ---------------------------------------------------------------------------
+powers = rng.uniform(4.0, 10.0, (300, 16))
+r = oracle.query_dtpm(pkg, powers)
+info = r.info
+print(f"\nDTPM trace (300 steps): peak {info['t_max_peak']:.1f} C, "
+      f"{info['violations']} violations, mean throttle "
+      f"{info['mean_throttle']:.2f}, headroom {info['headroom_c']:.1f} C, "
+      f"checkpoint_recommended={info['checkpoint_recommended']}")
+
+# ---------------------------------------------------------------------------
+# 5. design-space candidates against a family — and structured failure
+# ---------------------------------------------------------------------------
+family = PackageFamily(pkg, params=("htc_top", "power_scale"))
+params = family.sample_params(6, seed=1)
+q = np.full(16, 3.0)
+pends = [oracle.submit_family_steady(family, p, q) for p in params]
+peaks = [float(p.result().value.max()) for p in pends]
+print(f"\n6 family candidates, one batched solve: peaks "
+      f"{np.round(peaks, 1)} C")
+
+doomed = oracle.submit_steady(pkg, q, deadline_s=-1.0)   # already expired
+print(f"expired deadline -> status={doomed.result().status!r} "
+      f"(structured, service stays live)")
+assert oracle.query_steady(pkg, q).ok
+
+# ---------------------------------------------------------------------------
+# 6. the telemetry the BENCH serving section and the CI soak consume
+# ---------------------------------------------------------------------------
+snap = oracle.telemetry.snapshot()
+lat = snap["latency"]["steady"]
+print(f"\ntelemetry: {snap['submitted']} submitted, by_status "
+      f"{snap['by_status']}, steady p50 {lat['p50_s']*1e3:.2f} ms, "
+      f"mean occupancy {snap['mean_batch_occupancy']:.2f}, cache "
+      f"{snap['cache']['entries']} entries / "
+      f"{snap['cache']['hit_rate']:.0%} hit rate")
+oracle.close()

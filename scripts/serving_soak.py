@@ -1,0 +1,139 @@
+"""Serving soak: hammer the thermal oracle with threaded clients for
+~30 s and assert it stays correct and bounded.
+
+What it exercises (the CI non-blocking soak step runs this):
+  * mixed request kinds (steady / transient / DTPM / family-steady)
+    from several concurrent client threads;
+  * forced cache evictions: the model cache's byte budget holds ONE
+    model while clients alternate between two geometries, so the LRU
+    evicts and rebuilds continuously — the worst case for the
+    content-addressed cache;
+  * zero dropped responses: every submitted request must come back
+    fulfilled with an ok/degraded status (timeouts/overflows/errors
+    fail the soak — the queue is sized for the offered load);
+  * bounded memory: RSS growth over the soak stays under a generous
+    ceiling (evicted models and their jit caches must actually free).
+
+Run:  PYTHONPATH=src python scripts/serving_soak.py [--seconds 30]
+Exit code 0 on success; 1 with a diagnostic summary on any violation.
+"""
+import argparse
+import collections
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import PackageFamily, make_2p5d_package  # noqa: E402
+from repro.serving import ModelCache, ThermalOracle      # noqa: E402
+
+S = 4           # 4-chiplet geometry: rebuilds are cheap enough to force
+T = 50          # trace length for transient/DTPM requests
+
+
+def client(oracle, pkgs, fam, stop_at, results, idx):
+    rng = np.random.default_rng(idx)
+    kinds = ["steady", "transient", "dtpm", "family_steady", "steady"]
+    n = 0
+    while time.monotonic() < stop_at:
+        # alternate geometries in bursts: each switch forces an LRU
+        # eviction + rebuild, while within-burst requests exercise hits
+        pkg = pkgs[(n // 16) % len(pkgs)]
+        kind = kinds[n % len(kinds)]
+        q = rng.uniform(0.5, 4.0, S)
+        if kind == "steady":
+            pend = oracle.submit_steady(pkg, q)
+        elif kind == "transient":
+            pend = oracle.submit_transient(pkg, np.tile(q, (T, 1)), 0.01)
+        elif kind == "dtpm":
+            pend = oracle.submit_dtpm(pkg, np.tile(q * 2, (T, 1)))
+        else:
+            pend = oracle.submit_family_steady(
+                fam, fam.sample_params(1, seed=n)[0], q)
+        try:
+            resp = pend.result(timeout=120)
+            results[idx].append((kind, resp.status))
+        except TimeoutError:
+            results[idx].append((kind, "DROPPED"))
+        n += 1
+    return n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=30.0)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rss-budget-mb", type=float, default=800.0)
+    args = ap.parse_args(argv)
+
+    import psutil
+    proc = psutil.Process()
+
+    pkgs = [make_2p5d_package(S),
+            make_2p5d_package(S, htc_top=9000.0)]
+    fam = PackageFamily(pkgs[0], params=("htc_top", "power_scale"))
+    # budget sized to ~ONE model: alternating geometries evict each other
+    cache = ModelCache(max_bytes=96 * 1024)
+    oracle = ThermalOracle(fidelity="rom", capacity=8, max_queue=2048,
+                           cache=cache, build_opts={"n_moments": 2})
+
+    # warm both geometries + executables once so RSS baseline includes
+    # the steady-state compilation footprint, not just cold imports
+    for pkg in pkgs:
+        oracle.query_steady(pkg, np.full(S, 3.0))
+        oracle.query_transient(pkg, np.full((T, S), 2.0), 0.01)
+    rss0 = proc.memory_info().rss / 1e6
+
+    stop_at = time.monotonic() + args.seconds
+    results = [[] for _ in range(args.clients)]
+    threads = [threading.Thread(target=client,
+                                args=(oracle, pkgs, fam, stop_at,
+                                      results, i))
+               for i in range(args.clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    oracle.close()
+    rss1 = proc.memory_info().rss / 1e6
+
+    flat = [r for rs in results for r in rs]
+    by_status = collections.Counter(status for _, status in flat)
+    snap = oracle.telemetry.snapshot()
+    print(f"soak: {len(flat)} requests over {wall:.1f}s "
+          f"({len(flat)/wall:.0f} req/s, {args.clients} clients)")
+    print(f"  by_status: {dict(by_status)}")
+    print(f"  cache: {snap['cache']}")
+    print(f"  mean occupancy {snap['mean_batch_occupancy']:.2f}, "
+          f"mean queue depth {snap['mean_queue_depth']:.1f}")
+    print(f"  rss: {rss0:.0f} -> {rss1:.0f} MB (+{rss1-rss0:.0f})")
+
+    failures = []
+    if not flat:
+        failures.append("no requests completed")
+    bad = {s: n for s, n in by_status.items()
+           if s not in ("ok", "degraded")}
+    if bad:
+        failures.append(f"dropped/failed responses: {bad}")
+    if snap["cache"]["evictions"] < 2:
+        failures.append(
+            f"evictions not exercised ({snap['cache']['evictions']}) — "
+            f"budget too large for the soak to mean anything")
+    if rss1 - rss0 > args.rss_budget_mb:
+        failures.append(f"RSS grew {rss1-rss0:.0f} MB "
+                        f"(budget {args.rss_budget_mb:.0f} MB)")
+    if failures:
+        print("SOAK FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print("SOAK PASSED: zero dropped responses, bounded RSS, "
+          "evictions exercised")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

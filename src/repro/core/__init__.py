@@ -24,12 +24,13 @@ from .dtpm import DTPMState, ThermalManager
 from .family import FamilyParam, PackageFamily, TopologyError
 from .fidelity import (SOLVER_CROSSOVER_NODES, BatchedThermalSimulator,
                        ThermalSimulator, available_family_fidelities,
-                       available_fidelities, build, build_family,
+                       available_fidelities, build, build_family, cache_key,
                        register_family_fidelity, register_fidelity,
                        resolve_solver, simulate_batch_via_vmap)
 from .fvm_ref import (FVMFamilyModel, FVMReference, VoxelModel, voxelize)
 from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
-                       discretize, make_2p5d_package, make_3d_package,
+                       content_digest, content_token, discretize,
+                       make_2p5d_package, make_3d_package,
                        make_tpu_tray_package, package_from_name)
 from .materials import MATERIALS, HeatsinkSpec, Material
 from .power import V5E, HardwareSpec, StepCost, chip_power
@@ -53,10 +54,11 @@ __all__ = [
     "SOLVER_CROSSOVER_NODES", "BatchedThermalSimulator",
     "ThermalSimulator",
     "available_family_fidelities", "available_fidelities",
-    "build", "build_family", "register_family_fidelity",
+    "build", "build_family", "cache_key", "register_family_fidelity",
     "register_fidelity", "resolve_solver", "simulate_batch_via_vmap",
     "FVMFamilyModel", "FVMReference", "VoxelModel", "voxelize",
-    "Block", "Layer", "NodeGrid", "Package", "chiplet_tags", "discretize",
+    "Block", "Layer", "NodeGrid", "Package", "chiplet_tags",
+    "content_digest", "content_token", "discretize",
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",
     "package_from_name",
     "MATERIALS", "HeatsinkSpec", "Material",

@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .dss import DSSModel
 
@@ -61,8 +62,12 @@ class ThermalManager:
         return cls(dss=mdl, **control)
 
     def init_state(self) -> DTPMState:
-        return DTPMState(theta=jnp.zeros((self.dss.n,), jnp.float32),
-                         throttle=jnp.ones((), jnp.float32),
+        # the state rides the model's dtype: an f64-built rung (the
+        # oracle's x64 serving mode) must not see an f32 carry in the
+        # scan, and f32 rungs stay f32
+        dtype = self.dss.ad.dtype
+        return DTPMState(theta=jnp.zeros((self.dss.n,), dtype),
+                         throttle=jnp.ones((), dtype),
                          violations=jnp.zeros((), jnp.int32))
 
     def update(self, state: DTPMState, chip_powers: jnp.ndarray):
@@ -126,3 +131,30 @@ class ThermalManager:
 
             self._run_cache = (key, refs, go)
         return self._run_cache[2](powers_traj)
+
+    def serve_trace(self, powers_traj):
+        """Answer one serving request: ``(t_max_trace, telemetry)``.
+
+        The per-request form of :meth:`run` for the thermal oracle
+        (``serving/oracle.py``): rolls the controller over the trace and
+        reduces the result into the structured telemetry dict that rides
+        back on the response's ``info`` field — peak/final max
+        temperature, violation count, throttle behaviour, remaining
+        headroom to ``t_max``, and the pre-emptive checkpoint
+        recommendation. Host numpy out (serving responses are consumed
+        on client threads, not inside jit).
+        """
+        state, tmax, thr = self.run(powers_traj)
+        tmax = np.asarray(tmax)
+        thr = np.asarray(thr)
+        telemetry = {
+            "t_max_peak": float(tmax.max()),
+            "t_max_final": float(tmax[-1]),
+            "violations": int(state.violations),
+            "min_throttle": float(thr.min()),
+            "mean_throttle": float(thr.mean()),
+            "headroom_c": float(self.t_max - tmax.max()),
+            "throttle_traj": thr,
+            "checkpoint_recommended": self.should_checkpoint(state),
+        }
+        return tmax, telemetry

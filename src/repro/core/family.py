@@ -274,6 +274,31 @@ class PackageFamily:
         return np.array([p.base for p in self.params], np.float64)
 
     # ------------------------------------------------------------------
+    # canonical content identity (serving-cache key material)
+    # ------------------------------------------------------------------
+    def content_token(self) -> tuple:
+        """Canonical token of the family: the template geometry plus the
+        EXPANDED parameter list (name/kind/target/base per slot).
+
+        Two families over structurally identical templates with the same
+        parameterization tokenize identically; changing any template
+        field, or the parameter specs (even their order — the params
+        vector layout is order-sensitive), changes the token. Derived
+        state (grid, symbolic network, affine map) is a pure function of
+        these inputs and deliberately does not participate.
+        """
+        from .geometry import content_token
+        return ("PackageFamily", content_token(self.template),
+                ("params", tuple(content_token(p) for p in self.params)))
+
+    def content_digest(self) -> str:
+        """sha256 hex digest of :meth:`content_token` (mirrors
+        :func:`~repro.core.geometry.content_digest` for packages)."""
+        import hashlib
+        return hashlib.sha256(
+            repr(self.content_token()).encode()).hexdigest()
+
+    # ------------------------------------------------------------------
     # the per-candidate reference path
     # ------------------------------------------------------------------
     def _site_shift(self, params: np.ndarray) -> dict:

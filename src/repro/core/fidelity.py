@@ -77,7 +77,8 @@ and deliberately have no family builder — ``build_family`` raises
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Protocol, Tuple, runtime_checkable
+from typing import (Callable, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 
 @runtime_checkable
@@ -176,6 +177,64 @@ def resolve_solver(solver: str, n: int) -> str:
     if solver == "auto":
         return "cg" if n >= SOLVER_CROSSOVER_NODES else "dense"
     return solver
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed cache keys (the serving layer's model identity)
+# ---------------------------------------------------------------------------
+def _canon_opt(value):
+    """Canonical token of one build option value.
+
+    Handles everything :func:`~repro.core.geometry.content_token` does,
+    plus dtype OBJECTS (``jnp.float32`` / ``np.float32`` / ``np.dtype``),
+    which appear as the ``dtype=`` knob on every fidelity builder — all
+    object spellings of one dtype map to its ``np.dtype().str``. (A
+    dtype passed as a *string* stays a string token: that can only split
+    the cache, never falsely merge it.)
+    """
+    from .geometry import content_token
+    import numpy as np
+    try:
+        return content_token(value)
+    except TypeError:
+        pass
+    try:
+        return ("dtype", np.dtype(value).str)
+    except TypeError:
+        raise TypeError(
+            f"cache_key: option value {value!r} has no canonical form "
+            f"(callables / model objects cannot address a content cache "
+            f"— pass plain knobs and let the builder derive the rest)")
+
+
+def cache_key(target, fidelity: str, opts: Optional[Dict] = None) -> str:
+    """Content-addressed cache key of ``build(target, fidelity, **opts)``
+    (or ``build_family`` when ``target`` is a ``PackageFamily``).
+
+    The key is a sha256 over (a) the canonical content token of the
+    geometry — every field of the ``Package``/``PackageFamily`` tree,
+    bit-exact floats, see ``core/geometry.content_token`` — and (b) the
+    fidelity name plus the SORTED build options. Structurally identical
+    geometries built with identical knobs therefore collide (cache hit,
+    skipping symbolic assembly / COO plans / the ~98 s ROM basis);
+    perturbing any geometry field, material property, or solver knob
+    yields a different key (no false hits). ``serving/cache.py`` is the
+    consumer; tests/test_serving_cache.py pins the property.
+    """
+    import hashlib
+    from .geometry import Package, content_token
+    if isinstance(target, Package):
+        tok = content_token(target)
+    elif hasattr(target, "content_token"):
+        tok = target.content_token()
+    else:
+        raise TypeError(f"cache_key: cannot canonicalize "
+                        f"{type(target).__name__}; expected a Package or "
+                        f"an object exposing content_token()")
+    opt_tok = tuple(sorted((str(k), _canon_opt(v))
+                           for k, v in (opts or {}).items()))
+    return hashlib.sha256(
+        repr(("build", fidelity, tok, opt_tok)).encode()).hexdigest()
 
 
 _REGISTRY: Dict[str, Callable] = {}

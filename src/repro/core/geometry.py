@@ -16,6 +16,7 @@ Geometry construction is host-side numpy; solvers consume the flat arrays.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional, Sequence
 
 import numpy as np
@@ -66,6 +67,53 @@ class Package:
     @property
     def thickness(self) -> float:
         return sum(l.thickness for l in self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Canonical content hashing (the serving cache's identity of a geometry)
+# ---------------------------------------------------------------------------
+def content_token(obj) -> tuple:
+    """Canonical, hashable token of a geometry/config value tree.
+
+    Two independently constructed but structurally identical values map
+    to the SAME token; perturbing any field maps to a different one.
+    This is the identity the content-addressed model cache
+    (``serving/cache.py``) keys on, so it must be exact: floats tokenize
+    via ``float.hex()`` (bit-exact, no repr rounding), arrays via a
+    sha256 of their bytes, dataclasses via ``(type, field, value)``
+    triples — object identity and dict ordering never leak in.
+    """
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (type(obj).__name__,) + tuple(
+            (f.name, content_token(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj))
+    if isinstance(obj, (tuple, list)):
+        return ("seq", tuple(content_token(x) for x in obj))
+    if isinstance(obj, dict):
+        return ("map", tuple(sorted(
+            (str(k), content_token(v)) for k, v in obj.items())))
+    if isinstance(obj, (bool, np.bool_)):
+        return ("b", bool(obj))
+    if isinstance(obj, (float, np.floating)):
+        return ("f", float(obj).hex())
+    if isinstance(obj, (int, np.integer)):
+        return ("i", int(obj))
+    if isinstance(obj, (str, bytes)) or obj is None:
+        return (type(obj).__name__, obj)
+    if isinstance(obj, np.ndarray):
+        a = np.ascontiguousarray(obj)
+        return ("nd", a.dtype.str, a.shape,
+                hashlib.sha256(a.tobytes()).hexdigest())
+    raise TypeError(
+        f"content_token: {type(obj).__name__} has no canonical form; "
+        f"cacheable build inputs must be dataclasses, containers, "
+        f"scalars, strings or numpy arrays")
+
+
+def content_digest(obj) -> str:
+    """sha256 hex digest of :func:`content_token` — the stable string
+    identity of a ``Package`` (or any canonicalizable value tree)."""
+    return hashlib.sha256(repr(content_token(obj)).encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------

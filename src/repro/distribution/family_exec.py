@@ -53,6 +53,7 @@ the candidate batch.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -121,6 +122,12 @@ class FamilyExecutor:
                 f"splits evenly over the mesh")
         self.chunk_size = chunk_size
         self._jits: dict = {}
+        # Guards the _jits check-then-insert: the serving oracle runs
+        # models from a worker thread while clients may drive the same
+        # executor directly, so compilation must be re-entrant. Traced
+        # compilation itself happens OUTSIDE jax.jit (which is lazy), so
+        # holding the lock across _compile costs only dict bookkeeping.
+        self._jits_lock = threading.Lock()
         self._n_owners = 0
 
     def register(self) -> str:
@@ -133,8 +140,9 @@ class FamilyExecutor:
         identical call sites would otherwise silently serve each other's
         compiled closures — every model prefixes its keys with the token
         returned here instead."""
-        self._n_owners += 1
-        return f"m{self._n_owners}"
+        with self._jits_lock:
+            self._n_owners += 1
+            return f"m{self._n_owners}"
 
     def describe(self) -> dict:
         """Benchmark/telemetry summary of the execution layout."""
@@ -204,28 +212,30 @@ class FamilyExecutor:
     def _compile(self, key, fn: Callable, in_axes: Sequence[Optional[int]],
                  out_axis: int, per_candidate: bool,
                  with_carry: bool) -> Callable:
-        if key in self._jits:
+        with self._jits_lock:
+            if key in self._jits:
+                return self._jits[key]
+            self._evict(key)
+            f = fn
+            if per_candidate:
+                if with_carry:
+                    raise ValueError("carry is only supported for "
+                                     "natively batched callables")
+                f = jax.vmap(fn, in_axes=tuple(in_axes),
+                             out_axes=out_axis)
+            if self.mesh is not None:
+                arg_specs = tuple(self._spec(a) for a in in_axes)
+                out_spec = self._spec(out_axis)
+                if with_carry:
+                    # carry rides batch axis 0 (chunk-shaped CG states)
+                    f = _shard_map(f, self.mesh,
+                                   in_specs=(self._spec(0),) + arg_specs,
+                                   out_specs=(out_spec, self._spec(0)))
+                else:
+                    f = _shard_map(f, self.mesh, in_specs=arg_specs,
+                                   out_specs=out_spec)
+            self._jits[key] = jax.jit(f)
             return self._jits[key]
-        self._evict(key)
-        f = fn
-        if per_candidate:
-            if with_carry:
-                raise ValueError("carry is only supported for natively "
-                                 "batched callables")
-            f = jax.vmap(fn, in_axes=tuple(in_axes), out_axes=out_axis)
-        if self.mesh is not None:
-            arg_specs = tuple(self._spec(a) for a in in_axes)
-            out_spec = self._spec(out_axis)
-            if with_carry:
-                # carry rides batch axis 0 (chunk-shaped, e.g. CG states)
-                f = _shard_map(f, self.mesh,
-                               in_specs=(self._spec(0),) + arg_specs,
-                               out_specs=(out_spec, self._spec(0)))
-            else:
-                f = _shard_map(f, self.mesh, in_specs=arg_specs,
-                               out_specs=out_spec)
-        self._jits[key] = jax.jit(f)
-        return self._jits[key]
 
     # ------------------------------------------------------------------
     # the execution entry point

@@ -46,6 +46,7 @@ from .kernel import LANE, SUBLANE, fused_cg_step_pallas
 __all__ = [
     "CGStats", "FusedCGPlan", "fused_cg_plan", "fused_cg_solve",
     "pcg_loop", "resolve_cg_impl", "warn_unconverged",
+    "unconverged_counts", "reset_unconverged_counts",
 ]
 
 _CG_IMPLS = ("auto", "fused", "unfused")
@@ -423,17 +424,50 @@ def pcg_loop(matvec: Callable, prec: Callable, rhs, x0, tol: float,
                       converged=rn2 <= tol2b)
 
 
+# Per-solve-site dedup state for warn_unconverged: a high-QPS serving
+# loop re-running one unconverged configuration must not emit thousands
+# of identical RuntimeWarnings. Each site (the ``where`` string) warns
+# ONCE per process; every further hit only bumps its counter, which the
+# serving telemetry (``serving/telemetry.py``) surfaces in snapshots.
+_UNCONVERGED_COUNTS: dict = {}
+_WARNED_SITES: set = set()
+
+
+def unconverged_counts() -> dict:
+    """Snapshot of ``{solve site: number of unconverged solve CALLS}``
+    accumulated since process start (or the last reset). A "call" is one
+    ``warn_unconverged`` invocation whose stats contain any
+    iteration-cap hit — the rate-limited counterpart of the one-shot
+    warning."""
+    return dict(_UNCONVERGED_COUNTS)
+
+
+def reset_unconverged_counts() -> None:
+    """Clear the per-site counters AND re-arm the one-shot warnings
+    (tests of the warning path call this first)."""
+    _UNCONVERGED_COUNTS.clear()
+    _WARNED_SITES.clear()
+
+
 def warn_unconverged(stats: Optional[CGStats], where: str) -> None:
     """Host-side post-solve check: warn if any solve hit maxiter.
 
     Safe to call with traced stats (inside jit/vmap): silently returns,
     since convergence can only be inspected on concrete values.
+
+    Rate-limited: each solve site warns once per process; subsequent
+    unconverged calls at the same site are counted silently
+    (:func:`unconverged_counts`), keeping serving loops quiet.
     """
     if stats is None or isinstance(stats.converged, jax.core.Tracer):
         return
     conv = np.asarray(stats.converged)
     if conv.all():
         return
+    _UNCONVERGED_COUNTS[where] = _UNCONVERGED_COUNTS.get(where, 0) + 1
+    if where in _WARNED_SITES:
+        return
+    _WARNED_SITES.add(where)
     res = np.asarray(stats.residual)
     its = np.asarray(stats.iterations)
     bad = int(conv.size - conv.sum())
@@ -441,4 +475,6 @@ def warn_unconverged(stats: Optional[CGStats], where: str) -> None:
         f"{where}: {bad}/{conv.size} CG solve(s) hit the iteration cap "
         f"(max {int(its.max())} iterations, worst relative residual "
         f"{float(res.max()):.3e}); results may be unconverged — raise "
-        "cg_maxiter or loosen cg_tol.", RuntimeWarning, stacklevel=3)
+        "cg_maxiter or loosen cg_tol. (Warned once per site; further "
+        "occurrences are counted — see unconverged_counts().)",
+        RuntimeWarning, stacklevel=3)

@@ -1,6 +1,18 @@
 """Batched serving driver: prefill a batch of prompts, then decode with a
 fixed-capacity KV cache (continuous batching simplified to a fixed batch;
-slot recycling is a straightforward extension documented in DESIGN.md)."""
+slot recycling is a straightforward extension documented in DESIGN.md).
+
+Scope note (mirroring ``distribution/sharding.py``): this LM scaffold is
+the *idiom donor* for the thermal-oracle serving subsystem — the
+continuous-batching loop in ``repro/serving/batcher.py`` productionizes
+the pattern sketched here (fixed batch capacity as the ONE compiled
+shape, slot recycling between requests so a finishing request's slot is
+refilled without recompilation) for thermal queries instead of LM
+tokens, and adds what a one-shot driver never needs: a bounded queue
+with deadline expiry and overflow backpressure, structured failure
+responses, and per-request telemetry. The two files cross-reference each
+other so the serving paths don't drift; changes to the batching idiom
+here should be reflected there."""
 from __future__ import annotations
 
 import argparse

@@ -1,0 +1,27 @@
+"""Thermal-oracle serving subsystem: a persistent, continuous-batched,
+deadline-aware query service over the fidelity ladder.
+
+Layout:
+  oracle.py    — :class:`ThermalOracle`: the service (submit/query API,
+                 worker-side batch execution, warm(), x64 mode).
+  batcher.py   — :class:`ContinuousBatcher`: fixed-capacity slot-recycled
+                 batching loop (idiom donor: ``launch/serve.py``).
+  cache.py     — :class:`ModelCache`: content-addressed LRU model cache
+                 (keys from ``repro.core.fidelity.cache_key``).
+  telemetry.py — :class:`Telemetry`: per-request ring buffer + snapshots
+                 (the BENCH ``serving`` section's data source).
+"""
+from .batcher import ContinuousBatcher
+from .cache import ModelCache, estimate_nbytes
+from .oracle import OracleResponse, PendingResult, ThermalOracle
+from .telemetry import Telemetry
+
+__all__ = [
+    "ContinuousBatcher",
+    "ModelCache",
+    "OracleResponse",
+    "PendingResult",
+    "Telemetry",
+    "ThermalOracle",
+    "estimate_nbytes",
+]

@@ -1,0 +1,134 @@
+"""Fixed-capacity continuous batcher: the serving loop that coalesces
+concurrent thermal queries into batched solves.
+
+Scope note: the *idiom donor* here is the LM serving scaffold
+``launch/serve.py`` — a fixed-capacity batch whose slots are recycled
+between requests so ONE compiled executable serves the whole stream
+(continuous batching, simplified to a fixed batch shape). This module
+productionizes that idiom for thermal queries instead of LM tokens; the
+two files cross-reference each other so the serving paths don't drift.
+What carries over: fixed batch capacity as the compiled shape, slot
+recycling by padding (here with ``base_params``-style neutral rows, the
+same always-valid padding the PR-5 ``FamilyExecutor`` uses), one
+executable per request shape. What's new here: a deadline- and
+overflow-aware queue with structured failure responses, and per-request
+telemetry.
+
+Mechanics: client threads ``submit()`` pending requests into a bounded
+deque. One worker thread drains it: it takes the queue head, collects
+up to ``capacity`` more requests with the SAME group key (model key +
+request kind + trace shape — everything that determines the compiled
+executable), expires any whose deadline already passed (structured
+timeout response, never a crash), and hands the group to the oracle's
+execute callback. Because every group executes at the fixed capacity
+(short groups are padded by the executor/``simulate_batch`` path), a
+finishing request's slot is refilled from the queue on the next drain
+without recompilation. A full queue rejects at ``submit()`` time with a
+structured overflow response — backpressure, not an exception in the
+client thread.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class ContinuousBatcher:
+    """Single-worker continuous batcher over group-keyed requests.
+
+    execute(group_key, pendings): answer 1..capacity same-group requests
+        (runs on the worker thread; must fulfill every pending).
+    expire(pending): fulfill one whose deadline passed before dispatch.
+    capacity:  fixed batch capacity (the compiled batch shape).
+    max_queue: bounded queue length; submit() past it reports overflow.
+    """
+
+    def __init__(self, execute: Callable, expire: Callable,
+                 capacity: int = 8, max_queue: int = 256):
+        if capacity < 1 or max_queue < 1:
+            raise ValueError("capacity and max_queue must be >= 1")
+        self.capacity = int(capacity)
+        self.max_queue = int(max_queue)
+        self._execute = execute
+        self._expire = expire
+        self._queue: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> "ContinuousBatcher":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="thermal-batcher",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def submit(self, pending) -> bool:
+        """Enqueue; False means the queue is full (caller reports the
+        structured overflow response — nothing was enqueued)."""
+        with self._cond:
+            if len(self._queue) >= self.max_queue:
+                return False
+            pending.queue_depth = len(self._queue)
+            self._queue.append(pending)
+            self._cond.notify()
+            return True
+
+    # ------------------------------------------------------------------
+    def _collect(self) -> List:
+        """Pop the head's group (<= capacity live requests; expired ones
+        are answered with timeouts on the spot). Called under the lock;
+        returns [] only when stopping/empty."""
+        now = time.monotonic()
+        expired, group = [], []
+        while self._queue and self._queue[0].deadline is not None \
+                and now > self._queue[0].deadline:
+            expired.append(self._queue.popleft())
+        if self._queue:
+            head_key = self._queue[0].group_key
+            kept = collections.deque()
+            while self._queue and len(group) < self.capacity:
+                p = self._queue.popleft()
+                if p.deadline is not None and now > p.deadline:
+                    expired.append(p)
+                elif p.group_key == head_key:
+                    group.append(p)
+                else:
+                    kept.append(p)
+            kept.extend(self._queue)
+            self._queue = kept
+        for p in expired:
+            self._expire(p)
+        return group
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._stop:
+                    self._cond.wait(timeout=0.5)
+                if self._stop and not self._queue:
+                    return
+                group = self._collect()
+            if group:
+                self._execute(group[0].group_key, group)

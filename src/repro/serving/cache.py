@@ -1,0 +1,193 @@
+"""Content-addressed warm-model cache: repeat geometries skip every
+one-time build.
+
+The expensive part of answering a thermal query is never the solve —
+it's the one-time construction chain behind ``build()``: discretization,
+the symbolic COO edge pattern, fused-CG plans, preconditioner factors
+and (on the ROM rung) the block-Krylov basis, ~98 s cold at 8k nodes.
+This cache keys BUILT MODELS on the canonical content hash of their
+inputs (:func:`repro.core.fidelity.cache_key`: the full
+``Package``/``PackageFamily`` value tree plus fidelity and solver
+knobs), so two independently constructed but structurally identical
+geometries share one model object — and with it the symbolic network,
+COO/fused-CG plans, ROM basis and every warm jit cache hanging off it.
+
+Policy: LRU over a byte budget. Entry size is estimated by walking the
+model object graph and summing array buffer sizes (numpy + jax arrays),
+which is where essentially all model memory lives. Hits refresh
+recency; insertion evicts least-recently-used entries until the budget
+holds (the newest entry always stays, even oversized — the service
+must be able to answer). Hit/miss/eviction counters feed the serving
+telemetry; ``warm()`` is the explicit pre-build API the oracle exposes.
+
+Concurrent builds of the SAME key deduplicate: the first thread builds
+while later ones wait on an in-flight marker, then read the finished
+entry — a thundering herd on a cold 98 s basis pays it once.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.fidelity import cache_key
+
+
+def estimate_nbytes(obj, _seen: Optional[set] = None,
+                    _depth: int = 0) -> int:
+    """Approximate resident bytes of a model: the sum of all reachable
+    array buffers (numpy / jax), deduplicated by object identity. Small
+    Python overhead (dicts, scalars) is deliberately ignored — arrays
+    dominate by orders of magnitude."""
+    if _seen is None:
+        _seen = set()
+    if _depth > 8 or id(obj) in _seen or isinstance(obj, type):
+        return 0   # classes carry property DESCRIPTORS, not buffers
+    _seen.add(id(obj))
+    nbytes = getattr(obj, "nbytes", None)
+    if isinstance(nbytes, (int, np.integer)) and hasattr(obj, "dtype"):
+        return int(nbytes)
+    total = 0
+    if isinstance(obj, dict):
+        it = obj.values()
+    elif isinstance(obj, (list, tuple, set)):
+        it = obj
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        it = [getattr(obj, f.name) for f in dataclasses.fields(obj)]
+    elif hasattr(obj, "__dict__"):
+        it = vars(obj).values()
+    else:
+        return 0
+    for v in it:
+        total += estimate_nbytes(v, _seen, _depth + 1)
+    return total
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: object
+    nbytes: int
+    build_s: float     # wall time of the one-time build that made it
+    hits: int = 0
+
+
+class ModelCache:
+    """Content-addressed LRU model cache with a byte budget."""
+
+    def __init__(self, max_bytes: int = 1 << 30):
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.RLock()
+        self._entries: "collections.OrderedDict[str, _Entry]" = \
+            collections.OrderedDict()
+        self._building: Dict[str, threading.Event] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def key_for(target, fidelity: str, opts: Optional[dict] = None,
+                extra: tuple = ()) -> str:
+        """Cache key of ``build(target, fidelity, **opts)``. ``extra``
+        folds in non-build context that changes numerics (the oracle
+        passes its x64 flag: an f64-built model is NOT the f32 one)."""
+        opts = dict(opts or {})
+        if extra:
+            opts["__extra__"] = tuple(extra)
+        return cache_key(target, fidelity, opts)
+
+    def get(self, key: str):
+        """Entry for ``key`` or None (refreshes recency, counts a hit)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                return None
+            self._entries.move_to_end(key)
+            entry.hits += 1
+            self.hits += 1
+            return entry.value
+
+    def get_or_build(self, key: str, builder: Callable[[], object]
+                     ) -> Tuple[object, bool, float]:
+        """``(model, hit, build_s)`` — build-once semantics per key.
+
+        A miss runs ``builder()`` OUTSIDE the cache lock (builds take
+        seconds to minutes; lookups must not stall behind them); racing
+        misses on one key wait for the first build instead of repeating
+        it.
+        """
+        while True:
+            with self._lock:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self._entries.move_to_end(key)
+                    entry.hits += 1
+                    self.hits += 1
+                    return entry.value, True, entry.build_s
+                pending = self._building.get(key)
+                if pending is None:
+                    self._building[key] = threading.Event()
+                    self.misses += 1
+                    break
+            pending.wait()   # another thread is building this key
+        try:
+            t0 = time.perf_counter()
+            value = builder()
+            build_s = time.perf_counter() - t0
+            self.put(key, value, build_s=build_s)
+            return value, False, build_s
+        finally:
+            with self._lock:
+                self._building.pop(key).set()
+
+    def put(self, key: str, value: object, build_s: float = 0.0) -> None:
+        nbytes = estimate_nbytes(value)
+        with self._lock:
+            self._entries[key] = _Entry(value, nbytes, build_s)
+            self._entries.move_to_end(key)
+            total = sum(e.nbytes for e in self._entries.values())
+            while total > self.max_bytes and len(self._entries) > 1:
+                _, evicted = self._entries.popitem(last=False)
+                total -= evicted.nbytes
+                self.evictions += 1
+
+    def warm(self, target, fidelity: str, opts: Optional[dict] = None,
+             extra: tuple = (), builder: Optional[Callable] = None
+             ) -> Tuple[str, object, bool, float]:
+        """Explicitly pre-build (or touch) a model: ``(key, model, hit,
+        build_s)``. Default builder goes through the fidelity registry
+        (``build`` for packages, ``build_family`` for families)."""
+        key = self.key_for(target, fidelity, opts, extra)
+        if builder is None:
+            from ..core.fidelity import build, build_family
+            from ..core.geometry import Package
+            fn = build if isinstance(target, Package) else build_family
+
+            def builder():
+                return fn(target, fidelity, **(opts or {}))
+        model, hit, build_s = self.get_or_build(key, builder)
+        return key, model, hit, build_s
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            total = sum(e.nbytes for e in self._entries.values())
+            lookups = self.hits + self.misses
+            return {"entries": len(self._entries),
+                    "bytes": int(total),
+                    "max_bytes": self.max_bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "hit_rate": self.hits / lookups if lookups else 0.0}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

@@ -1,0 +1,491 @@
+"""The thermal oracle: a persistent in-process query service over the
+fidelity ladder.
+
+MFIT's runtime end (DTPM at milliseconds) only pays off when the models
+sit behind an always-on service — many concurrent queries against warm
+models, not one-shot ``build()`` scripts (cf. 3D-ICE 4.0's server mode).
+:class:`ThermalOracle` is that service:
+
+  * **Requests.** Steady (``q -> temps``), transient (``q[T,S] ->
+    temps[T,O]``), DTPM control traces (``powers[T,S] -> t_max/throttle
+    telemetry`` via :class:`~repro.core.dtpm.ThermalManager`), and their
+    design-space forms against a ``PackageFamily`` (per-candidate params
+    + q). Clients submit from any thread and get a :class:`PendingResult`
+    future; every outcome is a structured :class:`OracleResponse` —
+    deadline expiry and queue overflow are *statuses*, never crashes,
+    and a CG solve that hits its iteration cap degrades the response
+    instead of silently returning garbage.
+
+  * **Continuous batching.** One worker thread drains the queue through
+    ``serving/batcher.py``: same-model same-shape requests coalesce into
+    fixed-capacity batches answered by ``simulate_batch`` (single
+    package) or the ``FamilyExecutor``-routed ``steady_state_batch`` /
+    ``simulate_family`` (family), with short batches padded — zero power
+    rows on the trace axis, the family's ``base_params()`` on the
+    candidate axis, exactly the always-valid padding the PR-5 executor
+    uses — so one compiled executable serves the stream and a finishing
+    request's slot is refilled without recompilation. Steady queries on
+    the single-package path answer per-slot through the model's
+    host-prefactored solve (already microseconds on the ROM rung; the
+    batch there amortizes dispatch and telemetry, not device work).
+
+  * **Warm cache.** Models are content-addressed
+    (``serving/cache.py``): repeat geometries skip discretization,
+    symbolic assembly, COO/fused-CG plans and the ROM basis build.
+    ``warm()`` pre-builds; the hit/miss counters ride every response.
+
+  * **Telemetry.** Per-request latency, queue depth, batch occupancy,
+    cache hit rate and CG stats land in ``serving/telemetry.py``'s ring
+    buffer; ``telemetry.snapshot()`` is the structured view the BENCH
+    ``serving`` section and the CI soak consume.
+
+``x64=True`` builds and executes every model under
+``jax.experimental.enable_x64()`` *on the worker thread* (the flag is
+thread-local — a client-side context manager would not reach the
+worker); the f64 parity tests run the service in this mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.experimental
+import numpy as np
+
+from ..core.dtpm import ThermalManager
+from ..core.fidelity import build, build_family
+from ..core.geometry import Package
+from .batcher import ContinuousBatcher
+from .cache import ModelCache
+from .telemetry import Telemetry
+
+_KINDS = ("steady", "transient", "dtpm", "family_steady",
+          "family_transient")
+
+
+@dataclasses.dataclass
+class OracleResponse:
+    """Structured outcome of one request (every path returns one).
+
+    status: "ok" | "degraded" (answered, but a CG solve hit its
+            iteration cap — see ``cg``) | "timeout" (deadline passed
+            before dispatch) | "overflow" (queue full at submit) |
+            "error" (the solve raised; service stays live).
+    value:  temps — (n_obs,) steady, (T, n_obs) transient, (T,) max-temp
+            trace for DTPM; None unless answered.
+    """
+    status: str
+    value: Optional[np.ndarray] = None
+    detail: str = ""
+    kind: str = ""
+    latency_s: float = 0.0
+    queue_s: float = 0.0
+    cache_hit: Optional[bool] = None
+    occupancy: float = 0.0
+    cg: Optional[dict] = None
+    info: Optional[dict] = None       # DTPM per-request telemetry
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("ok", "degraded")
+
+
+@dataclasses.dataclass
+class _Request:
+    kind: str
+    key: str                 # content-addressed model key
+    target: object           # Package | PackageFamily
+    fidelity: str
+    opts: dict
+    payload: dict            # request arrays (q / q_traj / params / ...)
+    group_key: tuple
+    control: Optional[tuple] = None   # DTPM controller params
+
+
+class PendingResult:
+    """Client-side future for one submitted request."""
+
+    def __init__(self, req: _Request, deadline: Optional[float]):
+        self.req = req
+        self.deadline = deadline          # absolute time.monotonic()
+        self.enq_t = time.monotonic()
+        self.queue_depth = 0              # stamped by the batcher
+        self._event = threading.Event()
+        self._response: Optional[OracleResponse] = None
+
+    @property
+    def group_key(self) -> tuple:
+        return self.req.group_key
+
+    def fulfill(self, response: OracleResponse) -> None:
+        response.kind = self.req.kind
+        self._response = response
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> OracleResponse:
+        """Block for the response. ``timeout`` bounds the client-side
+        WAIT (raises TimeoutError); server-side deadlines are set per
+        request at submit and come back as status="timeout"."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"{self.req.kind} request not answered within {timeout}s "
+                f"(server-side deadline responses use status='timeout')")
+        return self._response
+
+
+class ThermalOracle:
+    """Persistent in-process thermal-query service (see module doc).
+
+    fidelity:  default answering rung ("rom" — microsecond steps,
+               node-count independent); per-request override allowed.
+    capacity:  fixed batch capacity (the compiled batch shape).
+    max_queue: queue bound; submissions past it get overflow responses.
+    x64:       build + execute everything in f64 (thread-local jax flag,
+               applied on the worker; part of the cache key).
+    default_deadline_s: deadline applied when a request names none.
+    """
+
+    def __init__(self, fidelity: str = "rom", capacity: int = 8,
+                 max_queue: int = 256, cache: Optional[ModelCache] = None,
+                 telemetry: Optional[Telemetry] = None, x64: bool = False,
+                 default_deadline_s: Optional[float] = None,
+                 build_opts: Optional[dict] = None, autostart: bool = True):
+        self.fidelity = fidelity
+        self.capacity = int(capacity)
+        self.x64 = bool(x64)
+        self.default_deadline_s = default_deadline_s
+        self.build_opts = dict(build_opts or {})
+        self.cache = cache if cache is not None else ModelCache()
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry(cache=self.cache)
+        self._managers: Dict[tuple, ThermalManager] = {}
+        self._managers_lock = threading.Lock()
+        self._batcher = ContinuousBatcher(
+            self._execute, self._expire, capacity=capacity,
+            max_queue=max_queue)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> "ThermalOracle":
+        self._batcher.start()
+        return self
+
+    def close(self) -> None:
+        self._batcher.stop()
+
+    def __enter__(self) -> "ThermalOracle":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # model plumbing
+    # ------------------------------------------------------------------
+    def _opts(self, fidelity: str, opts: Optional[dict]) -> dict:
+        return {**self.build_opts, **(opts or {})}
+
+    def _key(self, target, fidelity: str, opts: dict) -> str:
+        return self.cache.key_for(target, fidelity, opts,
+                                  extra=("x64", self.x64))
+
+    def _build(self, target, fidelity: str, opts: dict):
+        fn = build if isinstance(target, Package) else build_family
+        if self.x64:
+            with jax.experimental.enable_x64():
+                return fn(target, fidelity, **opts)
+        return fn(target, fidelity, **opts)
+
+    def _model(self, req: _Request) -> Tuple[object, bool, float]:
+        return self.cache.get_or_build(
+            req.key, lambda: self._build(req.target, req.fidelity,
+                                         req.opts))
+
+    def warm(self, target, fidelity: Optional[str] = None,
+             **opts) -> Tuple[str, bool, float]:
+        """Pre-build a model into the warm cache: ``(key, hit,
+        build_s)``. The explicit API for amortizing one-time builds
+        (e.g. the ~98 s 8k-node ROM basis) before traffic arrives."""
+        fidelity = fidelity or self.fidelity
+        opts = self._opts(fidelity, opts)
+        key = self._key(target, fidelity, opts)
+        _, hit, build_s = self.cache.get_or_build(
+            key, lambda: self._build(target, fidelity, opts))
+        return key, hit, build_s
+
+    def _manager(self, req: _Request, model) -> ThermalManager:
+        mkey = (req.key, req.control)
+        with self._managers_lock:
+            mgr = self._managers.get(mkey)
+            if mgr is None:
+                mgr = ThermalManager(dss=model, **dict(req.control))
+                self._managers[mkey] = mgr
+            return mgr
+
+    # ------------------------------------------------------------------
+    # submission API (any thread)
+    # ------------------------------------------------------------------
+    def _submit(self, req: _Request,
+                deadline_s: Optional[float]) -> PendingResult:
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline = None if deadline_s is None \
+            else time.monotonic() + deadline_s
+        pending = PendingResult(req, deadline)
+        self.telemetry.note_submit()
+        if not self._batcher.submit(pending):
+            resp = OracleResponse(
+                status="overflow",
+                detail=f"queue full ({self._batcher.max_queue}); request "
+                       f"rejected at submit — retry with backoff")
+            pending.fulfill(resp)
+            self.telemetry.record(kind=req.kind, status="overflow",
+                                  latency_s=0.0,
+                                  queue_depth=self._batcher.max_queue)
+        return pending
+
+    def submit_steady(self, pkg: Package, q, fidelity: Optional[str] = None,
+                      opts: Optional[dict] = None,
+                      deadline_s: Optional[float] = None) -> PendingResult:
+        fidelity = fidelity or self.fidelity
+        opts = self._opts(fidelity, opts)
+        key = self._key(pkg, fidelity, opts)
+        req = _Request("steady", key, pkg, fidelity, opts,
+                       {"q": np.asarray(q, np.float64)},
+                       group_key=(key, "steady"))
+        return self._submit(req, deadline_s)
+
+    def submit_transient(self, pkg: Package, q_traj, dt: float,
+                         fidelity: Optional[str] = None,
+                         opts: Optional[dict] = None,
+                         deadline_s: Optional[float] = None
+                         ) -> PendingResult:
+        fidelity = fidelity or self.fidelity
+        opts = self._opts(fidelity, opts)
+        key = self._key(pkg, fidelity, opts)
+        q_traj = np.asarray(q_traj, np.float64)
+        req = _Request("transient", key, pkg, fidelity, opts,
+                       {"q_traj": q_traj, "dt": float(dt)},
+                       group_key=(key, "transient", q_traj.shape[0],
+                                  round(float(dt), 12)))
+        return self._submit(req, deadline_s)
+
+    def submit_dtpm(self, pkg: Package, powers_traj,
+                    fidelity: Optional[str] = None,
+                    opts: Optional[dict] = None,
+                    control: Optional[dict] = None,
+                    deadline_s: Optional[float] = None) -> PendingResult:
+        """DTPM control-trace request: roll the ThermalManager over a
+        (T, S) full-speed power trace; the response's ``value`` is the
+        max-temp trace and ``info`` carries the per-request controller
+        telemetry (throttle trace, violations, headroom)."""
+        fidelity = fidelity or self.fidelity
+        if fidelity not in ("dss", "rom"):
+            raise ValueError("DTPM requests need a state-space rung "
+                             "('dss' or 'rom'), got "
+                             f"fidelity={fidelity!r}")
+        opts = self._opts(fidelity, opts)
+        key = self._key(pkg, fidelity, opts)
+        powers_traj = np.asarray(powers_traj, np.float64)
+        ctrl = tuple(sorted((control or {}).items()))
+        req = _Request("dtpm", key, pkg, fidelity, opts,
+                       {"powers": powers_traj},
+                       group_key=(key, "dtpm", powers_traj.shape[0],
+                                  ctrl),
+                       control=ctrl)
+        return self._submit(req, deadline_s)
+
+    def submit_family_steady(self, family, params, q,
+                             fidelity: Optional[str] = None,
+                             opts: Optional[dict] = None,
+                             deadline_s: Optional[float] = None
+                             ) -> PendingResult:
+        """One design-space candidate: params (P,), q (S,). Concurrent
+        candidates against the same family coalesce into one
+        ``steady_state_batch`` at the fixed capacity (pad =
+        ``base_params()``)."""
+        fidelity = fidelity or self.fidelity
+        opts = self._opts(fidelity, opts)
+        key = self._key(family, fidelity, opts)
+        req = _Request("family_steady", key, family, fidelity, opts,
+                       {"params": np.asarray(params, np.float64),
+                        "q": np.asarray(q, np.float64)},
+                       group_key=(key, "family_steady"))
+        return self._submit(req, deadline_s)
+
+    def submit_family_transient(self, family, params, q_traj, dt: float,
+                                fidelity: Optional[str] = None,
+                                opts: Optional[dict] = None,
+                                deadline_s: Optional[float] = None
+                                ) -> PendingResult:
+        fidelity = fidelity or self.fidelity
+        opts = self._opts(fidelity, opts)
+        key = self._key(family, fidelity, opts)
+        q_traj = np.asarray(q_traj, np.float64)
+        req = _Request("family_transient", key, family, fidelity, opts,
+                       {"params": np.asarray(params, np.float64),
+                        "q_traj": q_traj, "dt": float(dt)},
+                       group_key=(key, "family_transient",
+                                  q_traj.shape[0], round(float(dt), 12)))
+        return self._submit(req, deadline_s)
+
+    # blocking conveniences -------------------------------------------------
+    def query_steady(self, pkg, q, **kw) -> OracleResponse:
+        return self.submit_steady(pkg, q, **kw).result()
+
+    def query_transient(self, pkg, q_traj, dt, **kw) -> OracleResponse:
+        return self.submit_transient(pkg, q_traj, dt, **kw).result()
+
+    def query_dtpm(self, pkg, powers_traj, **kw) -> OracleResponse:
+        return self.submit_dtpm(pkg, powers_traj, **kw).result()
+
+    # ------------------------------------------------------------------
+    # worker-side execution (single thread; jit caches stay single-owner)
+    # ------------------------------------------------------------------
+    def _expire(self, pending: PendingResult) -> None:
+        now = time.monotonic()
+        resp = OracleResponse(
+            status="timeout", latency_s=now - pending.enq_t,
+            queue_s=now - pending.enq_t,
+            detail="deadline passed before dispatch (queue wait "
+                   f"{now - pending.enq_t:.3f}s)")
+        pending.fulfill(resp)
+        self.telemetry.record(kind=pending.req.kind, status="timeout",
+                              latency_s=resp.latency_s,
+                              queue_s=resp.queue_s,
+                              queue_depth=pending.queue_depth)
+
+    def _execute(self, group_key: tuple, group) -> None:
+        try:
+            if self.x64:
+                with jax.experimental.enable_x64():
+                    self._answer(group)
+            else:
+                self._answer(group)
+        except Exception as exc:  # noqa: BLE001 — service must stay live
+            now = time.monotonic()
+            frame = traceback.extract_tb(exc.__traceback__)[-1]
+            detail = (f"{type(exc).__name__}: {exc} "
+                      f"[at {frame.filename.rsplit('/', 1)[-1]}:"
+                      f"{frame.lineno} in {frame.name}]")
+            for p in group:
+                if not p.done():
+                    p.fulfill(OracleResponse(
+                        status="error", latency_s=now - p.enq_t,
+                        detail=detail))
+                    self.telemetry.record(kind=p.req.kind,
+                                          status="error",
+                                          latency_s=now - p.enq_t,
+                                          queue_depth=p.queue_depth)
+
+    @staticmethod
+    def _cg_summary(model) -> Optional[dict]:
+        stats = getattr(model, "last_cg_stats", None)
+        if stats is None:
+            stats = getattr(getattr(model, "rcf", None), "last_cg_stats",
+                            None)
+        if stats is None:
+            return None
+        conv = np.asarray(stats.converged)
+        return {"max_iterations": int(np.asarray(stats.iterations).max()),
+                "worst_residual": float(np.asarray(stats.residual).max()),
+                "converged": bool(conv.all())}
+
+    def _answer(self, group) -> None:
+        req0 = group[0].req
+        start = time.monotonic()
+        model, hit, build_s = self._model(req0)
+        kind = req0.kind
+        if kind == "steady":
+            values = [np.asarray(model.observe(
+                model.steady_state(p.req.payload["q"]))) for p in group]
+        elif kind == "transient":
+            values = self._answer_transient(model, group)
+        elif kind == "dtpm":
+            values = self._answer_dtpm(model, group)
+        elif kind == "family_steady":
+            values = self._answer_family_steady(model, group)
+        elif kind == "family_transient":
+            values = self._answer_family_transient(model, group)
+        else:  # unreachable: submit_* constrain kinds
+            raise ValueError(f"unknown request kind {kind!r}")
+        cg = self._cg_summary(model)
+        degraded = cg is not None and not cg["converged"]
+        done = time.monotonic()
+        occupancy = len(group) / self.capacity
+        for p, value in zip(group, values):
+            info = None
+            if isinstance(value, tuple):   # dtpm: (trace, telemetry)
+                value, info = value
+            resp = OracleResponse(
+                status="degraded" if degraded else "ok", value=value,
+                detail="CG hit its iteration cap — results may be "
+                       "unconverged (see cg)" if degraded else "",
+                latency_s=done - p.enq_t, queue_s=start - p.enq_t,
+                cache_hit=hit, occupancy=occupancy, cg=cg, info=info)
+            p.fulfill(resp)
+            self.telemetry.record(
+                kind=kind, status=resp.status, latency_s=resp.latency_s,
+                queue_s=resp.queue_s, queue_depth=p.queue_depth,
+                occupancy=occupancy, cache_hit=hit, cg=cg,
+                build_s=build_s)
+
+    # --- per-kind batch answers (fixed capacity, padded slots) --------
+    def _answer_transient(self, model, group) -> list:
+        t_len, n_src = group[0].req.payload["q_traj"].shape
+        dt = group[0].req.payload["dt"]
+        q = np.zeros((t_len, self.capacity, n_src))  # pad: zero power
+        for i, p in enumerate(group):
+            q[:, i, :] = p.req.payload["q_traj"]
+        theta0 = model.zero_state(batch=self.capacity)
+        obs = model.simulate_batch(theta0, q, dt)    # (T, capacity, O)
+        obs = np.asarray(obs)
+        return [obs[:, i, :] for i in range(len(group))]
+
+    def _answer_dtpm(self, model, group) -> list:
+        mgr = self._manager(group[0].req, model)
+        out = []
+        for p in group:
+            out.append(mgr.serve_trace(p.req.payload["powers"]))
+        return out
+
+    def _family_batch(self, group, with_traj: bool):
+        fam = group[0].req.target
+        base = fam.base_params()
+        params = np.broadcast_to(base, (self.capacity, base.shape[0])) \
+            .copy()                                  # pad: base_params
+        for i, p in enumerate(group):
+            params[i] = p.req.payload["params"]
+        if not with_traj:
+            n_src = group[0].req.payload["q"].shape[0]
+            q = np.zeros((self.capacity, n_src))
+            for i, p in enumerate(group):
+                q[i] = p.req.payload["q"]
+            return params, q
+        t_len, n_src = group[0].req.payload["q_traj"].shape
+        q = np.zeros((t_len, self.capacity, n_src))
+        for i, p in enumerate(group):
+            q[:, i, :] = p.req.payload["q_traj"]
+        return params, q
+
+    def _answer_family_steady(self, model, group) -> list:
+        params, q = self._family_batch(group, with_traj=False)
+        theta = model.steady_state_batch(params, q)
+        temps = np.asarray(model.observe_batch(theta, params))
+        return [temps[i] for i in range(len(group))]
+
+    def _answer_family_transient(self, model, group) -> list:
+        params, q = self._family_batch(group, with_traj=True)
+        dt = group[0].req.payload["dt"]
+        obs = np.asarray(model.simulate_family(params, q, dt))
+        return [obs[:, i, :] for i in range(len(group))]

@@ -1,0 +1,101 @@
+"""Serving telemetry: a lock-guarded ring buffer of per-request events
+plus structured snapshots.
+
+Every completed request (ok / degraded / timeout / overflow / error)
+lands one event dict in a bounded ring (``collections.deque(maxlen=)``)
+recording end-to-end latency, queue wait, queue depth at enqueue, the
+batch occupancy it rode in (live slots / capacity), whether its model
+came out of the warm cache, and — when the answering solver was the CG
+tier — a per-solve :class:`~repro.kernels.fused_cg.ops.CGStats` summary
+(max iterations, worst residual, all-converged flag).
+
+:meth:`Telemetry.snapshot` reduces the ring into the structured block
+the ``serving`` section of ``BENCH_exec_time.json`` consumes: request
+counts by status/kind, p50/p99 latency per request kind, mean queue
+depth and batch occupancy, the attached cache's hit/miss/byte stats,
+and the process-wide per-site unconverged-CG counters that the
+rate-limited ``warn_unconverged`` accumulates
+(``kernels/fused_cg/ops.unconverged_counts``).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _percentile(values: List[float], q: float) -> float:
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+class Telemetry:
+    """Ring buffer of per-request events + counters (thread-safe)."""
+
+    def __init__(self, ring: int = 1024, cache=None):
+        self._lock = threading.Lock()
+        self._ring: collections.deque = collections.deque(maxlen=ring)
+        self.cache = cache            # ModelCache whose stats() to embed
+        self.counts: Dict[str, int] = {}   # by status
+        self.submitted = 0
+
+    # ------------------------------------------------------------------
+    def note_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def record(self, *, kind: str, status: str, latency_s: float,
+               queue_s: float = 0.0, queue_depth: int = 0,
+               occupancy: float = 0.0, cache_hit: Optional[bool] = None,
+               cg: Optional[dict] = None, **extra) -> None:
+        """Append one per-request event (called once per response)."""
+        event = {"kind": kind, "status": status,
+                 "latency_s": float(latency_s),
+                 "queue_s": float(queue_s),
+                 "queue_depth": int(queue_depth),
+                 "occupancy": float(occupancy),
+                 "cache_hit": cache_hit, "cg": cg, **extra}
+        with self._lock:
+            self._ring.append(event)
+            self.counts[status] = self.counts.get(status, 0) + 1
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Structured reduction of the ring (the BENCH-consumed shape)."""
+        from ..kernels.fused_cg.ops import unconverged_counts
+        with self._lock:
+            events = list(self._ring)
+            counts = dict(self.counts)
+            submitted = self.submitted
+        by_kind: Dict[str, List[float]] = {}
+        depths, occs = [], []
+        answered = 0
+        for e in events:
+            if e["status"] in ("ok", "degraded"):
+                by_kind.setdefault(e["kind"], []).append(e["latency_s"])
+                depths.append(e["queue_depth"])
+                occs.append(e["occupancy"])
+                answered += 1
+        latency = {
+            kind: {"p50_s": _percentile(vals, 50),
+                   "p99_s": _percentile(vals, 99),
+                   "mean_s": float(np.mean(vals)), "n": len(vals)}
+            for kind, vals in sorted(by_kind.items())}
+        snap = {
+            "submitted": submitted,
+            "completed": int(sum(counts.values())),
+            "by_status": counts,
+            "latency": latency,
+            "mean_queue_depth": float(np.mean(depths)) if depths
+            else 0.0,
+            "mean_batch_occupancy": float(np.mean(occs)) if occs
+            else 0.0,
+            "ring_events": len(events),
+            "cg_unconverged_sites": unconverged_counts(),
+        }
+        if self.cache is not None:
+            snap["cache"] = self.cache.stats()
+        return snap

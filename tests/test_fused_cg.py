@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import ThermalRCModel, build_network, make_2p5d_package
+from repro.kernels.fused_cg import ops
 from repro.kernels.fused_cg.ops import (fused_cg_plan, fused_cg_solve,
                                         pcg_loop, resolve_cg_impl)
 from repro.kernels.fused_cg.ref import dense_matrix_ref, dense_solve_ref
@@ -175,10 +176,16 @@ def test_maxiter_cap_sets_converged_false_and_model_warns():
     # ... and the model-level steady solve surfaces it host-side
     model = ThermalRCModel(build_network(make_2p5d_package(16)),
                            solver="cg", cg_maxiter=2, refine_passes=0)
+    ops.reset_unconverged_counts()  # re-arm the one-shot per-site warning
     with pytest.warns(RuntimeWarning, match="iteration cap"):
         model.steady_state(np.full(len(model.source_names), 2.0))
     assert model.last_cg_stats is not None
     assert not bool(np.asarray(model.last_cg_stats.converged).all())
+    # rate limit: the same site warns once per process; repeats only count
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        model.steady_state(np.full(len(model.source_names), 2.0))
+    assert ops.unconverged_counts()["rc steady CG"] >= 2
 
 
 def test_model_steady_records_stats():

@@ -1,0 +1,185 @@
+"""Content-addressed model cache (PR 7): canonical cache keys over
+Package/PackageFamily value trees, LRU byte budget, build dedup.
+
+Regression bars: structurally identical geometries (independently
+constructed objects) must map to ONE cache key; perturbing any field —
+geometry, fidelity, solver knob — must change it; the LRU must respect
+its byte budget while always keeping the newest entry; racing builds of
+one key must run the builder exactly once.
+"""
+import copy
+import dataclasses
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.family import PackageFamily
+from repro.core.fidelity import cache_key
+from repro.core.geometry import (content_digest, content_token,
+                                 make_2p5d_package, make_3d_package)
+from repro.serving.cache import ModelCache, estimate_nbytes
+
+
+# ---------------------------------------------------------------------------
+# canonical content hashing
+# ---------------------------------------------------------------------------
+def test_content_digest_is_structural_not_identity():
+    a = make_2p5d_package(4, htc_top=6000.0)
+    b = make_2p5d_package(4, htc_top=6000.0)   # distinct object tree
+    assert a is not b
+    assert content_token(a) == content_token(b)
+    assert content_digest(a) == content_digest(b)
+    # deep copies hash identically too
+    assert content_digest(copy.deepcopy(a)) == content_digest(a)
+
+
+def test_content_digest_sensitive_to_every_generator_knob():
+    base = make_2p5d_package(4, htc_top=6000.0, t_ambient=25.0)
+    perturbed = [
+        make_2p5d_package(9, htc_top=6000.0, t_ambient=25.0),
+        make_2p5d_package(4, htc_top=6000.1, t_ambient=25.0),
+        make_2p5d_package(4, htc_top=6000.0, t_ambient=25.5),
+        make_2p5d_package(4, htc_top=6000.0, funnel=False),
+        make_3d_package(4, tiers=2, htc_top=6000.0),
+    ]
+    digests = [content_digest(p) for p in [base] + perturbed]
+    assert len(set(digests)) == len(digests)
+
+
+def test_content_token_rejects_unhashable_values():
+    with pytest.raises(TypeError, match="content_token"):
+        content_token(object())
+
+
+# ---------------------------------------------------------------------------
+# build() cache keys
+# ---------------------------------------------------------------------------
+def test_cache_key_identical_inputs_collide():
+    a = make_2p5d_package(4)
+    b = make_2p5d_package(4)
+    assert cache_key(a, "rom", {"ts": 0.01}) == \
+        cache_key(b, "rom", {"ts": 0.01})
+    # opts dict insertion order is canonicalized away
+    assert cache_key(a, "rc", {"solver": "cg", "cg_maxiter": 50}) == \
+        cache_key(a, "rc", {"cg_maxiter": 50, "solver": "cg"})
+    # dtype OBJECTS canonicalize across spellings
+    assert cache_key(a, "rom", {"dtype": jnp.float32}) == \
+        cache_key(a, "rom", {"dtype": np.dtype("float32")})
+
+
+def test_cache_key_sensitive_to_fidelity_and_knobs():
+    pkg = make_2p5d_package(4)
+    base = cache_key(pkg, "rom", {"ts": 0.01})
+    assert base != cache_key(pkg, "dss", {"ts": 0.01})
+    assert base != cache_key(pkg, "rom", {"ts": 0.02})
+    assert base != cache_key(pkg, "rom", {"ts": 0.01, "r": 16})
+    assert base != cache_key(pkg, "rom")
+    assert base != cache_key(make_2p5d_package(4, htc_top=7000.0),
+                             "rom", {"ts": 0.01})
+
+
+def test_cache_key_family_targets():
+    fa = PackageFamily(make_2p5d_package(4), params=("htc_top",
+                                                     "power_scale"))
+    fb = PackageFamily(make_2p5d_package(4), params=("htc_top",
+                                                     "power_scale"))
+    assert fa.content_digest() == fb.content_digest()
+    assert cache_key(fa, "rom") == cache_key(fb, "rom")
+    # family and its bare template are DIFFERENT targets
+    assert cache_key(fa, "rom") != cache_key(fa.template, "rom")
+    # the param list is part of the identity (content and order)
+    f_less = PackageFamily(make_2p5d_package(4), params=("htc_top",))
+    f_swap = PackageFamily(make_2p5d_package(4), params=("power_scale",
+                                                         "htc_top"))
+    keys = {cache_key(f, "rom") for f in (fa, f_less, f_swap)}
+    assert len(keys) == 3
+
+
+def test_cache_key_rejects_unkeyable_targets():
+    with pytest.raises(TypeError, match="cache_key"):
+        cache_key(42, "rom")
+
+
+# ---------------------------------------------------------------------------
+# ModelCache policy
+# ---------------------------------------------------------------------------
+def _blob(kb: int) -> dict:
+    return {"buf": np.zeros(kb * 1024, np.uint8)}
+
+
+def test_estimate_nbytes_sums_arrays_once():
+    arr = np.zeros(1000, np.float64)
+    model = {"a": arr, "b": [arr, np.zeros(10, np.float32)],
+             "cls": np.ndarray, "scalar": 3.5}
+    # shared array counted once; CLASS objects contribute nothing (their
+    # nbytes attribute is a property descriptor, not a buffer)
+    assert estimate_nbytes(model) == 8000 + 40
+
+
+def test_lru_eviction_respects_budget_and_recency():
+    cache = ModelCache(max_bytes=3 * 1024 * 1024 // 2)   # ~1.5 MB
+    for name in ("a", "b", "c"):
+        cache.put(name, _blob(512))                      # 0.5 MB each
+    assert len(cache) == 3
+    cache.get("a")                       # refresh "a" -> "b" is LRU
+    cache.put("d", _blob(512))
+    stats = cache.stats()
+    assert stats["evictions"] == 1
+    assert cache.get("b") is None        # the stale one went
+    assert cache.get("a") is not None and cache.get("d") is not None
+    # an oversized newest entry still lands (service must answer)
+    cache.put("huge", _blob(4096))
+    assert cache.get("huge") is not None
+    assert cache.stats()["bytes"] <= 4096 * 1024 + 8
+
+
+def test_get_or_build_runs_builder_once_across_threads():
+    cache = ModelCache()
+    calls = []
+    gate = threading.Event()
+
+    def builder():
+        gate.wait(5.0)
+        calls.append(1)
+        return _blob(1)
+
+    results = []
+
+    def worker():
+        results.append(cache.get_or_build("k", builder))
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    gate.set()
+    for t in threads:
+        t.join(10.0)
+    assert len(calls) == 1                       # one build, five waits
+    assert len(results) == 6
+    models = {id(model) for model, _, _ in results}
+    assert len(models) == 1                      # everyone got THE entry
+    hits = [hit for _, hit, _ in results]
+    assert hits.count(False) == 1
+    stats = cache.stats()
+    assert stats["misses"] == 1 and stats["hits"] == 5
+
+
+def test_warm_builds_then_hits():
+    cache = ModelCache()
+    built = []
+
+    def builder():
+        built.append(1)
+        return _blob(1)
+
+    pkg = make_2p5d_package(4)
+    key1, _, hit1, build1 = cache.warm(pkg, "rom", {"ts": 0.01},
+                                       builder=builder)
+    key2, _, hit2, build2 = cache.warm(make_2p5d_package(4), "rom",
+                                       {"ts": 0.01}, builder=builder)
+    assert key1 == key2
+    assert (hit1, hit2) == (False, True)
+    assert len(built) == 1
+    assert build2 == build1     # hit reports the original build cost

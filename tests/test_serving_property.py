@@ -1,0 +1,138 @@
+"""Hypothesis property tests for the content-addressed cache keys
+(PR 7 satellite): over random valid geometries, structural identity
+implies key identity, and perturbing ANY field implies a different key.
+"""
+import copy
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'dev' extra")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.family import PackageFamily
+from repro.core.fidelity import cache_key
+from repro.core.geometry import make_2p5d_package, make_3d_package
+
+
+@st.composite
+def packages(draw):
+    """Random VALID Package geometries across the generator space (the
+    test_property.py strategy): 2.5D/3D, chiplet count, cooling, funnel
+    nodes, ambient."""
+    kind = draw(st.sampled_from(["2p5d", "3d"]))
+    n_side = draw(st.sampled_from([1, 2, 3]))
+    htc = draw(st.floats(500.0, 20000.0))
+    t_amb = draw(st.floats(15.0, 45.0))
+    funnel = draw(st.booleans())
+    if kind == "3d":
+        tiers = draw(st.sampled_from([2, 3]))
+        return make_3d_package(n_side * n_side, tiers=tiers, htc_top=htc,
+                               t_ambient=t_amb, funnel=funnel)
+    return make_2p5d_package(n_side * n_side, htc_top=htc,
+                             t_ambient=t_amb, funnel=funnel)
+
+
+@given(packages(), st.sampled_from(["rc", "dss", "rom"]))
+@settings(max_examples=25, deadline=None)
+def test_structural_identity_means_key_identity(pkg, fidelity):
+    """An independently constructed but value-identical Package (deep
+    copy severs ALL object identity) keys to the same cache entry."""
+    clone = copy.deepcopy(pkg)
+    assert clone is not pkg
+    assert cache_key(clone, fidelity, {"ts": 0.01}) == \
+        cache_key(pkg, fidelity, {"ts": 0.01})
+
+
+@st.composite
+def field_perturbations(draw):
+    """A (name, fn) pair perturbing one field somewhere in the Package
+    value tree — top-level scalar, nested layer, or deeper still (a
+    block rectangle, a material property)."""
+    def top(field, delta):
+        return lambda p: dataclasses.replace(
+            p, **{field: getattr(p, field) + delta})
+
+    def layer(field, scale):
+        def go(p):
+            i = draw(st.integers(0, len(p.layers) - 1))
+            lyr = p.layers[i]
+            new = dataclasses.replace(lyr,
+                                      **{field: getattr(lyr, field) * scale})
+            return dataclasses.replace(
+                p, layers=p.layers[:i] + (new,) + p.layers[i + 1:])
+        return go
+
+    def material(prop):
+        def go(p):
+            i = draw(st.integers(0, len(p.layers) - 1))
+            lyr = p.layers[i]
+            mat = dataclasses.replace(lyr.material,
+                                      **{prop: getattr(lyr.material,
+                                                       prop) * 1.001})
+            return dataclasses.replace(
+                p, layers=p.layers[:i] +
+                (dataclasses.replace(lyr, material=mat),) +
+                p.layers[i + 1:])
+        return go
+
+    def block_rect(p):
+        layers_with_blocks = [i for i, l in enumerate(p.layers)
+                              if l.blocks]
+        if not layers_with_blocks:
+            return dataclasses.replace(p, length=p.length * 1.001)
+        i = draw(st.sampled_from(layers_with_blocks))
+        lyr = p.layers[i]
+        j = draw(st.integers(0, len(lyr.blocks) - 1))
+        blk = lyr.blocks[j]
+        new_blk = dataclasses.replace(blk, x0=blk.x0 + 1e-6)
+        return dataclasses.replace(
+            p, layers=p.layers[:i] + (dataclasses.replace(
+                lyr, blocks=lyr.blocks[:j] + (new_blk,) +
+                lyr.blocks[j + 1:]),) + p.layers[i + 1:])
+
+    return draw(st.sampled_from([
+        ("htc_top", top("htc_top", 1.0)),
+        ("t_ambient", top("t_ambient", 0.25)),
+        ("length", top("length", 1e-6)),
+        ("layer_thickness", layer("thickness", 1.001)),
+        ("material_kz", material("kz")),
+        ("material_cp", material("cp")),
+        ("block_rect", block_rect),
+    ]))
+
+
+@given(packages(), field_perturbations())
+@settings(max_examples=25, deadline=None)
+def test_any_field_perturbation_changes_key(pkg, perturbation):
+    name, fn = perturbation
+    perturbed = fn(pkg)
+    assert cache_key(perturbed, "rom") != cache_key(pkg, "rom"), name
+
+
+@given(packages())
+@settings(max_examples=10, deadline=None)
+def test_family_key_covers_template_and_params(pkg):
+    fam = PackageFamily(pkg, params=("htc_top", "power_scale"))
+    clone = PackageFamily(copy.deepcopy(pkg),
+                          params=("htc_top", "power_scale"))
+    assert cache_key(clone, "rom") == cache_key(fam, "rom")
+    # dropping a param axis or perturbing the template changes the key
+    narrower = PackageFamily(pkg, params=("htc_top",))
+    shifted = PackageFamily(
+        dataclasses.replace(pkg, t_ambient=pkg.t_ambient + 1.0),
+        params=("htc_top", "power_scale"))
+    keys = {cache_key(f, "rom") for f in (fam, narrower, shifted)}
+    assert len(keys) == 3
+
+
+@given(packages(), st.sampled_from([("ts", 0.01, 0.02),
+                                    ("r", 12, 16),
+                                    ("n_moments", 2, 4)]))
+@settings(max_examples=10, deadline=None)
+def test_solver_knobs_are_part_of_the_key(pkg, knob):
+    name, v1, v2 = knob
+    assert cache_key(pkg, "rom", {name: v1}) != \
+        cache_key(pkg, "rom", {name: v2})

@@ -112,6 +112,25 @@ if st is not None:
           f"iterations, residual {float(st.residual):.1e}, "
           f"converged={bool(st.converged)}")
 
+# The ladder made automatic: build(pkg, "auto", tol=...) routes each
+# query to the cheapest rung whose CERTIFIED error bound meets the
+# target, escalating when the certificate fails. The certificate is an
+# a-posteriori residual bound (core/router.py), so the answer carries
+# its own error bar — no reference run needed. Same query, two targets:
+# the loose one certifies on the reduced rung, the tight one escalates
+# to the full-order exact-ZOH reference.
+router = build(pkg, "auto", tol=1e-2, ts=DT)
+q_short = q[:100]
+# certificates are linear in the drive — normalize so the ROM bound
+# sits around 1e-2 and the tol sweep below straddles it
+q_short = q_short * (8e-3 / router.query_transient(
+    q_short, rung="rom").certified)
+for tol in (1e-1, 1e-4):
+    ans = router.query_transient(q_short, tol=tol)
+    print(f"[auto ] tol={tol:.0e} -> rung {ans.rung!r:6s} certified "
+          f"<= {ans.certified:.2e} C (margin {ans.margin:+.2e}, "
+          f"{ans.escalations} escalation(s))")
+
 # Level 3 of the API: don't build models, ASK a service. The thermal
 # oracle (repro.serving, examples/thermal_service.py) keeps warm
 # content-addressed models behind a continuous-batched, deadline-aware

@@ -17,9 +17,9 @@ from .assembly import NumericAssembly, SymbolicNetwork, symbolic_network
 from .baselines import BASELINES, hotspot_like, pact_like, threedice_like
 from .calibrate import (default_cap_multipliers, multipliers_by_layer_name,
                         tune_capacitance)
-from .dss import (ContinuousSS, DSSFamilyModel, DSSModel, continuous_ss,
-                  discretize_css, discretize_rc, spectral_radius,
-                  zoh_discretize)
+from .dss import (ContinuousSS, DSSFamilyModel, DSSModel, EighZOH,
+                  continuous_ss, discretize_css, discretize_rc,
+                  spectral_radius, zoh_discretize)
 from .dtpm import DTPMState, ThermalManager
 from .family import FamilyParam, PackageFamily, TopologyError
 from .fidelity import (SOLVER_CROSSOVER_NODES, BatchedThermalSimulator,
@@ -38,6 +38,8 @@ from .rc_model import (RCFamilyModel, RCNetwork, ThermalRCModel,
                        build_model, build_network, observation_matrix)
 from .rom import (ROMFamilyModel, ROMModel, build_rom, krylov_basis,
                   project_network)
+from .router import (CostModel, ErrorCertifier, RoutedAnswer,
+                     RoutedFamilySimulator, RoutedThermalSimulator)
 from .workloads import ALL_WORKLOADS, P2P5D, P3D, PowerSpec, get_workload
 
 __all__ = [
@@ -46,9 +48,9 @@ __all__ = [
     "BASELINES", "hotspot_like", "pact_like", "threedice_like",
     "default_cap_multipliers", "multipliers_by_layer_name",
     "tune_capacitance",
-    "ContinuousSS", "DSSFamilyModel", "DSSModel", "continuous_ss",
-    "discretize_css", "discretize_rc", "spectral_radius",
-    "zoh_discretize",
+    "ContinuousSS", "DSSFamilyModel", "DSSModel", "EighZOH",
+    "continuous_ss", "discretize_css", "discretize_rc",
+    "spectral_radius", "zoh_discretize",
     "DTPMState", "ThermalManager",
     "FamilyParam", "PackageFamily", "TopologyError",
     "SOLVER_CROSSOVER_NODES", "BatchedThermalSimulator",
@@ -67,5 +69,7 @@ __all__ = [
     "build_network", "observation_matrix",
     "ROMFamilyModel", "ROMModel", "build_rom", "krylov_basis",
     "project_network",
+    "CostModel", "ErrorCertifier", "RoutedAnswer",
+    "RoutedFamilySimulator", "RoutedThermalSimulator",
     "ALL_WORKLOADS", "P2P5D", "P3D", "PowerSpec", "get_workload",
 ]

@@ -271,6 +271,94 @@ def _expm(a: np.ndarray) -> np.ndarray:
             jax.scipy.linalg.expm(jnp.asarray(a, jnp.float64)))
 
 
+class EighZOH:
+    """Host-float64 exact-ZOH reference evaluator over ONE symmetric
+    eigendecomposition of the whitened pencil.
+
+    Whitening the state (``z = C^(1/2) theta``) turns the RC dynamics
+    into ``z' = Sym z + C^(-1/2) P q`` with ``Sym = C^(-1/2) G C^(-1/2)``
+    symmetric negative definite, so a single ``eigh`` (cheaper and
+    better-conditioned than a stiff ``expm``, and reusable) yields the
+    exact ZOH pair at ANY sampling period as two O(N^2) products:
+
+        Ad = C^(-1/2) U e^(w dt) U' C^(1/2),
+        Bd = C^(-1/2) U diag((e^(w dt)-1)/w) U' C^(-1/2) P.
+
+    This is the adaptive router's reference rung (``core/router.py``):
+    its transient answers are full-order f64 exact-ZOH rollouts — the
+    same discretization class the acceptance tests measure against — and
+    the factor cache doubles as the error certifier's source of the
+    exact decay rate ``lambda_min`` (the whitened pencil's eigenvalue
+    closest to zero) and of the ``Ad V`` products behind the ROM
+    transient certificates. The spectrum is strictly negative for any
+    grounded (convection-coupled) package; a non-negative mode means the
+    network has a floating component and is rejected.
+    """
+
+    def __init__(self, net, tags: Optional[list] = None):
+        import scipy.linalg as sla
+        self.net = net
+        c = np.asarray(net.C, np.float64)
+        self._c_sqrt = np.sqrt(c)
+        self._c_isqrt = 1.0 / self._c_sqrt
+        sym = net.g_dense() * self._c_isqrt[:, None] * self._c_isqrt
+        self.w, self.u = sla.eigh(0.5 * (sym + sym.T))
+        if self.w.max() >= 0.0:
+            raise ValueError(
+                f"whitened pencil has a non-decaying mode "
+                f"(max eig {self.w.max():.3e} >= 0): floating network?")
+        self.h = observation_matrix(net, tags)
+        self.tags = sorted({t for t in net.grid.tags if t}) \
+            if tags is None else list(tags)
+        self.source_names = list(net.grid.source_names)
+        self.t_ambient = float(net.t_ambient)
+        self._p_white = self._c_isqrt[:, None] * np.asarray(net.P,
+                                                            np.float64)
+        self._disc: dict = {}
+
+    @property
+    def lambda_min(self) -> float:
+        """Exact slowest decay rate of the pencil (-G, C): the whitened
+        spectrum's eigenvalue closest to zero, negated."""
+        return float(-self.w.max())
+
+    def discretize(self, dt: float):
+        """Exact host-f64 ZOH pair ``(ad, bd)`` at sampling period dt —
+        O(N^2) from the cached factors, bounded per-dt cache (same
+        policy as ``DSSModel._regen_cache``)."""
+        key = round(float(dt), 12)
+        hit = self._disc.get(key)
+        if hit is not None:
+            return hit
+        if len(self._disc) >= 8:
+            self._disc.pop(next(iter(self._disc)))
+        e = np.exp(self.w * dt)
+        ad_w = (self.u * e) @ self.u.T
+        bd_w = (self.u * ((e - 1.0) / self.w)) @ (self.u.T @ self._p_white)
+        ad = self._c_isqrt[:, None] * ad_w * self._c_sqrt
+        bd = self._c_isqrt[:, None] * bd_w
+        self._disc[key] = (ad, bd)
+        return self._disc[key]
+
+    def steady(self, q_src) -> np.ndarray:
+        """Exact steady state ``(-G)^-1 P q`` from the factors (host f64)."""
+        q = np.asarray(q_src, np.float64)
+        z = -(self.u / self.w) @ (self.u.T @ (self._p_white @ q))
+        return self._c_isqrt * z
+
+    def simulate(self, theta0, q_traj, dt: float) -> np.ndarray:
+        """theta0 (N,), q_traj (T, S) -> observations (T, n_obs) in
+        absolute degC, post-step sampling (the ladder's convention)."""
+        ad, bd = self.discretize(dt)
+        th = np.asarray(theta0, np.float64)
+        q = np.asarray(q_traj, np.float64)
+        obs = np.empty((q.shape[0], self.h.shape[0]))
+        for k in range(q.shape[0]):
+            th = ad @ th + bd @ q[k]
+            obs[k] = self.h @ th
+        return obs + self.t_ambient
+
+
 def spectral_radius(dss: DSSModel) -> float:
     """max |eig(Ad)| — must be < 1 for a dissipative package (stability;
     property-tested in tests/test_dss.py)."""

@@ -260,7 +260,8 @@ def register_family_fidelity(name: str):
 
 def _ensure_registered() -> None:
     # Registration happens as an import side effect of each model module.
-    from . import baselines, dss, fvm_ref, rc_model, rom  # noqa: F401
+    from . import (baselines, dss, fvm_ref, rc_model, rom,  # noqa: F401
+                   router)
 
 
 def available_fidelities() -> Tuple[str, ...]:

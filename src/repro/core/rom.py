@@ -50,6 +50,7 @@ iterations into batched r x r GEMMs.
 """
 from __future__ import annotations
 
+import collections
 from typing import Optional
 
 import jax
@@ -78,10 +79,18 @@ _DROP_TOL = 1e-8
 def _make_neg_g_solver(net: RCNetwork, solver: str,
                        cg_tol: float = 1e-10, cg_maxiter: int = 5000,
                        matvec_backend: str = "auto",
-                       cg_impl: str = "auto"):
-    """Block solver ``B (N, k) -> (-G)^-1 B`` in float64 (host in/out).
+                       cg_impl: str = "auto", shift: float = 0.0):
+    """Block solver ``B (N, k) -> (shift*C - G)^-1 B`` in float64 (host
+    in/out); ``shift=0`` is the plain ``(-G)^-1`` of the single-point
+    Krylov recursion and of every steady-state consumer.
 
-    "dense": one host Cholesky of -G, reused for every block.
+    ``shift > 0`` keeps the operator SPD (-G is SPD, C positive
+    diagonal), so both tiers apply unchanged: a positive shift only ADDS
+    to the diagonal. This is the solve behind the rational multi-point
+    Krylov option (expansion at s = shift) and the error certifier's
+    dual solves.
+
+    "dense": one host Cholesky of (shift*C - G), reused for every block.
     "cg": matrix-free block CG where each iteration over the whole block
     is one fused Jacobi-PCG step (``kernels/fused_cg``; the block rides
     the kernel's batch axis) — the dense G is never formed. Runs in f64
@@ -89,12 +98,18 @@ def _make_neg_g_solver(net: RCNetwork, solver: str,
     runtime never needs it). ``cg_impl="unfused"`` is the historical
     one-op-per-piece escape hatch.
     """
+    shift = float(shift)
+    if shift < 0.0:
+        raise ValueError(f"shift must be >= 0 (SPD operator), got {shift}")
     if solver == "dense":
         import scipy.linalg as sla
-        cho = sla.cho_factor(-net.g_dense())
+        a = -net.g_dense()
+        if shift:
+            a[np.diag_indices_from(a)] += shift * net.C
+        cho = sla.cho_factor(a)
         return lambda b: sla.cho_solve(cho, b)
 
-    neg_diag = net.neg_g_diag()
+    neg_diag = net.neg_g_diag() + shift * net.C
     with jax.experimental.enable_x64():
         plan = fused_cg_plan(net.rows, net.cols, net.n)
         gvals = jnp.asarray(net.gvals, jnp.float64)
@@ -116,12 +131,13 @@ def _make_neg_g_solver(net: RCNetwork, solver: str,
 
 
 def krylov_basis(net: RCNetwork, r: Optional[int] = None,
-                 n_moments: int = DEFAULT_MOMENTS, solver: str = "auto",
+                 n_moments=DEFAULT_MOMENTS, solver: str = "auto",
                  drop_tol: float = _DROP_TOL, cg_tol: float = 1e-10,
-                 cg_maxiter: int = 5000,
-                 cg_impl: str = "auto") -> np.ndarray:
+                 cg_maxiter: int = 5000, cg_impl: str = "auto",
+                 shifts: tuple = (0.0,)) -> np.ndarray:
     """C-orthonormal block-Krylov basis V (N, r) matching block moments
-    of ``H (sC - G)^-1 P`` around s = 0 (PRIMA-style, host float64).
+    of ``H (sC - G)^-1 P`` around the expansion points ``shifts``
+    (PRIMA-style, host float64; default single-point s = 0).
 
     Block Arnoldi with full reorthogonalization: each block is
     C-orthogonalized against the accepted basis (twice), then
@@ -132,49 +148,89 @@ def krylov_basis(net: RCNetwork, r: Optional[int] = None,
     the recursion deflates to nothing). ``r=None`` keeps every
     independent column of ``n_moments`` blocks, i.e. r <= n_moments * S.
 
-    ``solver`` is the solver-tier knob for the inner ``(-G)^-1`` block
-    solves (resolved against the node count as everywhere else).
+    ``shifts`` is the rational multi-point option: ``(0.0, s1, ...)``
+    runs one recursion per expansion point with the SPD solve
+    ``(s_j C - G)^-1``, all orthogonalizing against the ONE shared
+    basis, in order. ``n_moments`` may be a matching tuple giving each
+    point its own block count (a scalar splits near-evenly); an explicit
+    ``r`` is a single shared column cap consumed in shift order, so the
+    trailing point's block is dominance-truncated to whatever budget
+    remains. Front-loading moments at DC and spending the last few
+    columns on one block at a shift near the fast end of the spectrum
+    (``s ~ 1/dt``) covers the transfer function with fewer total columns
+    than piling all moments at s = 0: e.g. ``n_moments=(5, 1),
+    shifts=(0.0, 100.0), r=84`` certifies tighter transient error than
+    the default single-point 6S basis — the knob that cuts r below 6S
+    at equal certified error (pinned by ``tests/test_rom.py``; the
+    adaptive router exposes it as ``rom_opts={"shifts": ...,
+    "n_moments": ...}``).
+
+    ``solver`` is the solver-tier knob for the inner block solves
+    (resolved against the node count as everywhere else).
     """
     n = net.n
     solver = resolve_solver(solver, n)
-    solve_block = _make_neg_g_solver(net, solver, cg_tol=cg_tol,
-                                     cg_maxiter=cg_maxiter,
-                                     cg_impl=cg_impl)
+    shifts = tuple(float(s) for s in shifts)
+    if not shifts:
+        raise ValueError("shifts must name at least one expansion point")
     c_diag = np.asarray(net.C, np.float64)
     r_cap = n if r is None else min(int(r), n)
     if r is not None and r_cap < 1:
         raise ValueError(f"r must be >= 1, got {r}")
-    max_blocks = n_moments if r is None else max(n_moments, n)
 
+    n_shifts = len(shifts)
+    if isinstance(n_moments, (tuple, list)):
+        if len(n_moments) != n_shifts:
+            raise ValueError(
+                f"n_moments tuple length {len(n_moments)} != "
+                f"{n_shifts} shifts")
+        moments = tuple(int(m) for m in n_moments)
+    else:
+        m_base, m_rem = divmod(int(n_moments), n_shifts)
+        moments = tuple(m_base + (1 if j < m_rem else 0)
+                        for j in range(n_shifts))
     v_basis = np.zeros((n, 0))
-    block = solve_block(np.asarray(net.P, np.float64))
-    for blk in range(max_blocks):
-        # deflation reference: the block's PRE-orthogonalization column
-        # C-norms — once the recursion exhausts the reachable subspace,
-        # the orthogonalized residual is pure roundoff relative to THIS
-        # scale (judging against the residual's own largest eigenvalue
-        # would keep amplified noise columns and break C-orthonormality)
-        col_sq = np.einsum("ij,ij->j", block, c_diag[:, None] * block)
-        scale_pre = float(col_sq.max()) if col_sq.size else 0.0
-        if scale_pre <= 0.0:
-            break                            # empty block (no sources)
-        for _ in range(2):  # MGS reorthogonalization against the basis
-            if v_basis.shape[1]:
-                block = block - v_basis @ (v_basis.T
-                                           @ (c_diag[:, None] * block))
-        gram = block.T @ (c_diag[:, None] * block)
-        gram = 0.5 * (gram + gram.T)
-        w, u = np.linalg.eigh(gram)
-        w, u = w[::-1], u[:, ::-1]          # dominant directions first
-        keep = w > scale_pre * drop_tol ** 2
-        if not keep.any():
-            break                            # block fully deflated
-        new = block @ (u[:, keep] / np.sqrt(w[keep]))
-        new = new[:, :r_cap - v_basis.shape[1]]
-        v_basis = np.hstack([v_basis, new])
-        if v_basis.shape[1] >= r_cap or blk == max_blocks - 1:
-            break                            # don't pay an unused solve
-        block = solve_block(c_diag[:, None] * new)
+    for j, s in enumerate(shifts):
+        m_j = moments[j]
+        if m_j == 0 or v_basis.shape[1] >= r_cap:
+            continue
+        solve_block = _make_neg_g_solver(net, solver, cg_tol=cg_tol,
+                                         cg_maxiter=cg_maxiter,
+                                         cg_impl=cg_impl, shift=s)
+        # single-shift explicit r keeps generating moments until the
+        # budget fills; with several points each spends exactly its
+        # moment count so later shifts see the leftover budget
+        max_blocks = m_j if (r is None or n_shifts > 1) else max(m_j, n)
+        block = solve_block(np.asarray(net.P, np.float64))
+        for blk in range(max_blocks):
+            # deflation reference: the block's PRE-orthogonalization
+            # column C-norms — once the recursion exhausts the reachable
+            # subspace, the orthogonalized residual is pure roundoff
+            # relative to THIS scale (judging against the residual's own
+            # largest eigenvalue would keep amplified noise columns and
+            # break C-orthonormality)
+            col_sq = np.einsum("ij,ij->j", block,
+                               c_diag[:, None] * block)
+            scale_pre = float(col_sq.max()) if col_sq.size else 0.0
+            if scale_pre <= 0.0:
+                break                        # empty block (no sources)
+            for _ in range(2):  # MGS reorthogonalization vs the basis
+                if v_basis.shape[1]:
+                    block = block - v_basis @ (
+                        v_basis.T @ (c_diag[:, None] * block))
+            gram = block.T @ (c_diag[:, None] * block)
+            gram = 0.5 * (gram + gram.T)
+            w, u = np.linalg.eigh(gram)
+            w, u = w[::-1], u[:, ::-1]      # dominant directions first
+            keep = w > scale_pre * drop_tol ** 2
+            if not keep.any():
+                break                        # block fully deflated
+            new = block @ (u[:, keep] / np.sqrt(w[keep]))
+            new = new[:, :r_cap - v_basis.shape[1]]
+            v_basis = np.hstack([v_basis, new])
+            if v_basis.shape[1] >= r_cap or blk == max_blocks - 1:
+                break                        # don't pay an unused solve
+            block = solve_block(c_diag[:, None] * new)
     if v_basis.shape[1] == 0:
         raise ValueError("Krylov recursion produced an empty basis "
                          "(no sources?)")
@@ -239,7 +295,8 @@ class ROMModel:
         self._a = np.linalg.solve(self.chat, self.ghat)
         self._b = np.linalg.solve(self.chat, self.phat)
         self.H = jnp.asarray(self.hhat, dtype)
-        self._zoh_cache: dict = {}
+        self._zoh_cache: "collections.OrderedDict" = \
+            collections.OrderedDict()
         self.ad, self.bd = self._zoh(ts)
         self._cho = sla.cho_factor(-self.ghat)
         self._cho_solve = sla.cho_solve
@@ -265,16 +322,30 @@ class ROMModel:
         return self.n_full / self.r
 
     # -- ZOH regeneration ----------------------------------------------------
+    # per-dt (ad, bd) cache bound, mirroring the executor's dt-keyed jit
+    # cache policy (``fidelity.evict_stale_jits`` keep=8): a DTPM
+    # controller sweeping sampling periods must not accumulate one pair
+    # per dt forever
+    _ZOH_CACHE_CAP = 8
+
     def _zoh(self, dt: float):
-        """(ad, bd) at sampling period dt (cached; r x r expm to miss)."""
+        """(ad, bd) at sampling period dt — LRU-bounded cache, r x r
+        expm to miss. True LRU (hits refresh recency), not FIFO: a DTPM
+        loop that keeps returning to its base period must not see that
+        hot pair evicted by a sweep of one-shot dts. Regeneration is
+        deterministic (host f64 ``zoh_discretize`` of the fixed reduced
+        pencil), so an evicted entry comes back bitwise-identical."""
         key = round(float(dt), 12)
-        if key not in self._zoh_cache:
-            if len(self._zoh_cache) >= 8:  # bound long-lived processes
-                self._zoh_cache.pop(next(iter(self._zoh_cache)))
-            ad, bd = zoh_discretize(self._a, self._b, dt)
-            self._zoh_cache[key] = (jnp.asarray(ad, self.dtype),
-                                    jnp.asarray(bd, self.dtype))
-        return self._zoh_cache[key]
+        hit = self._zoh_cache.get(key)
+        if hit is not None:
+            self._zoh_cache.move_to_end(key)
+            return hit
+        while len(self._zoh_cache) >= self._ZOH_CACHE_CAP:
+            self._zoh_cache.popitem(last=False)
+        ad, bd = zoh_discretize(self._a, self._b, dt)
+        pair = (jnp.asarray(ad, self.dtype), jnp.asarray(bd, self.dtype))
+        self._zoh_cache[key] = pair
+        return pair
 
     # -- ThermalSimulator protocol ------------------------------------------
     def zero_state(self, batch: Optional[int] = None) -> jnp.ndarray:
@@ -345,21 +416,22 @@ class ROMModel:
 
 @register_fidelity("rom")
 def build_rom(pkg: Package, r: Optional[int] = None,
-              n_moments: int = DEFAULT_MOMENTS, ts: float = 0.01,
+              n_moments=DEFAULT_MOMENTS, ts: float = 0.01,
               solver: str = "auto", dtype=jnp.float32,
               cap_multipliers: Optional[dict] = None,
               basis: Optional[np.ndarray] = None,
               cg_tol: float = 1e-10, cg_maxiter: int = 5000,
-              cg_impl: str = "auto",
+              cg_impl: str = "auto", shifts: tuple = (0.0,),
               grid: Optional[NodeGrid] = None) -> ROMModel:
     """Registry builder: package -> RC network -> Krylov basis -> ROM.
 
     ``r`` / ``n_moments`` are the accuracy knobs (see module docstring);
-    ``solver`` picks the tier for the one-time basis solves ("auto"
-    resolves against the node count, so 8k+-node packages build the basis
-    matrix-free). ``basis`` injects a precomputed (N, r) basis — the hook
-    the family path and cross-validation tests use to share one basis
-    across candidates.
+    ``shifts`` selects rational multi-point expansion (see
+    :func:`krylov_basis`); ``solver`` picks the tier for the one-time
+    basis solves ("auto" resolves against the node count, so 8k+-node
+    packages build the basis matrix-free). ``basis`` injects a
+    precomputed (N, r) basis — the hook the family path and
+    cross-validation tests use to share one basis across candidates.
     """
     net = build_network(pkg, grid=grid,
                         cap_multipliers=_resolve_cap_multipliers(
@@ -367,7 +439,7 @@ def build_rom(pkg: Package, r: Optional[int] = None,
     if basis is None:
         basis = krylov_basis(net, r=r, n_moments=n_moments, solver=solver,
                              cg_tol=cg_tol, cg_maxiter=cg_maxiter,
-                             cg_impl=cg_impl)
+                             cg_impl=cg_impl, shifts=shifts)
     return ROMModel(net, basis, ts=ts, dtype=dtype)
 
 
@@ -394,12 +466,12 @@ class ROMFamilyModel:
     fidelity = "rom"
 
     def __init__(self, family, r: Optional[int] = None,
-                 n_moments: int = DEFAULT_MOMENTS, ts: float = 0.01,
+                 n_moments=DEFAULT_MOMENTS, ts: float = 0.01,
                  cap_multipliers: Optional[dict] = None,
                  dtype=jnp.float32, basis: Optional[np.ndarray] = None,
                  solver: str = "auto", cg_tol: float = 1e-10,
                  cg_maxiter: int = 5000, cg_impl: str = "auto",
-                 **rc_opts):
+                 shifts: tuple = (0.0,), **rc_opts):
         self.rcf = RCFamilyModel(family, cap_multipliers=cap_multipliers,
                                  dtype=dtype, cg_impl=cg_impl, **rc_opts)
         self.family = family
@@ -415,7 +487,8 @@ class ROMFamilyModel:
             # as on the single-package build(pkg, "rom", ...) path
             basis = krylov_basis(net0, r=r, n_moments=n_moments,
                                  solver=solver, cg_tol=cg_tol,
-                                 cg_maxiter=cg_maxiter, cg_impl=cg_impl)
+                                 cg_maxiter=cg_maxiter, cg_impl=cg_impl,
+                                 shifts=shifts)
         self.V = np.asarray(basis, np.float64)
         self._vd = jnp.asarray(self.V, dtype)
 

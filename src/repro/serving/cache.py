@@ -16,13 +16,21 @@ Policy: LRU over a byte budget. Entry size is estimated by walking the
 model object graph and summing array buffer sizes (numpy + jax arrays),
 which is where essentially all model memory lives. Hits refresh
 recency; insertion evicts least-recently-used entries until the budget
-holds (the newest entry always stays, even oversized — the service
-must be able to answer). Hit/miss/eviction counters feed the serving
-telemetry; ``warm()`` is the explicit pre-build API the oracle exposes.
+holds. An entry larger than the whole budget is REJECTED outright
+(counted in ``rejected``) instead of admitted: admitting it can never
+satisfy the budget and would evict every other resident model for a
+value that itself must go next — the service still answers, because
+``get_or_build`` hands the built value to the caller (and to every
+thread waiting on the in-flight build) whether or not the cache kept
+it. Byte accounting is incremental and exact: overwrites release the
+old entry's bytes before charging the new one's. Hit/miss/eviction
+counters feed the serving telemetry; ``warm()`` is the explicit
+pre-build API the oracle exposes.
 
 Concurrent builds of the SAME key deduplicate: the first thread builds
-while later ones wait on an in-flight marker, then read the finished
-entry — a thundering herd on a cold 98 s basis pays it once.
+while later ones wait on an in-flight marker that carries the built
+value — a thundering herd on a cold 98 s basis pays it once, even when
+the finished model is too big for the cache to retain.
 """
 from __future__ import annotations
 
@@ -75,6 +83,16 @@ class _Entry:
     hits: int = 0
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """In-flight build marker: carries the finished value to waiters so
+    dedup works even when the cache rejects the entry (oversized)."""
+    event: threading.Event
+    value: object = None
+    build_s: float = 0.0
+    ok: bool = False   # builder finished without raising
+
+
 class ModelCache:
     """Content-addressed LRU model cache with a byte budget."""
 
@@ -83,10 +101,12 @@ class ModelCache:
         self._lock = threading.RLock()
         self._entries: "collections.OrderedDict[str, _Entry]" = \
             collections.OrderedDict()
-        self._building: Dict[str, threading.Event] = {}
+        self._building: Dict[str, _InFlight] = {}
+        self._total_bytes = 0       # exact resident bytes (incremental)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.rejected = 0           # oversized entries never admitted
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -117,8 +137,11 @@ class ModelCache:
 
         A miss runs ``builder()`` OUTSIDE the cache lock (builds take
         seconds to minutes; lookups must not stall behind them); racing
-        misses on one key wait for the first build instead of repeating
-        it.
+        misses on one key wait for the first build and read the built
+        value off the in-flight marker — they get the model even when
+        the cache declined to retain it (oversized entry). A build that
+        raises releases the waiters, and the first of them retries as
+        the new builder.
         """
         while True:
             with self._lock:
@@ -130,30 +153,50 @@ class ModelCache:
                     return entry.value, True, entry.build_s
                 pending = self._building.get(key)
                 if pending is None:
-                    self._building[key] = threading.Event()
+                    self._building[key] = _InFlight(threading.Event())
                     self.misses += 1
                     break
-            pending.wait()   # another thread is building this key
+            pending.event.wait()   # another thread is building this key
+            if pending.ok:
+                with self._lock:
+                    self.hits += 1
+                return pending.value, True, pending.build_s
+        inflight = self._building[key]
         try:
             t0 = time.perf_counter()
             value = builder()
-            build_s = time.perf_counter() - t0
-            self.put(key, value, build_s=build_s)
-            return value, False, build_s
+            inflight.build_s = time.perf_counter() - t0
+            inflight.value = value
+            inflight.ok = True
+            self.put(key, value, build_s=inflight.build_s)
+            return value, False, inflight.build_s
         finally:
             with self._lock:
-                self._building.pop(key).set()
+                self._building.pop(key).event.set()
 
-    def put(self, key: str, value: object, build_s: float = 0.0) -> None:
+    def put(self, key: str, value: object, build_s: float = 0.0) -> bool:
+        """Insert (or overwrite) an entry; returns whether it was
+        retained. An entry bigger than the whole budget is rejected —
+        retaining it could only evict everything else without ever
+        fitting the budget. Eviction then walks LRU-first; because every
+        resident entry fits the budget individually, the loop always
+        terminates with exact ``total <= max_bytes`` accounting."""
         nbytes = estimate_nbytes(value)
         with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._total_bytes -= old.nbytes
+            if nbytes > self.max_bytes:
+                self.rejected += 1
+                return False
             self._entries[key] = _Entry(value, nbytes, build_s)
-            self._entries.move_to_end(key)
-            total = sum(e.nbytes for e in self._entries.values())
-            while total > self.max_bytes and len(self._entries) > 1:
+            self._total_bytes += nbytes
+            while self._total_bytes > self.max_bytes and \
+                    len(self._entries) > 1:
                 _, evicted = self._entries.popitem(last=False)
-                total -= evicted.nbytes
+                self._total_bytes -= evicted.nbytes
                 self.evictions += 1
+            return True
 
     def warm(self, target, fidelity: str, opts: Optional[dict] = None,
              extra: tuple = (), builder: Optional[Callable] = None
@@ -175,18 +218,19 @@ class ModelCache:
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
-            total = sum(e.nbytes for e in self._entries.values())
             lookups = self.hits + self.misses
             return {"entries": len(self._entries),
-                    "bytes": int(total),
+                    "bytes": int(self._total_bytes),
                     "max_bytes": self.max_bytes,
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
+                    "rejected": self.rejected,
                     "hit_rate": self.hits / lookups if lookups else 0.0}
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._total_bytes = 0
 
     def __len__(self) -> int:
         with self._lock:

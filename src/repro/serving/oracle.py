@@ -39,6 +39,14 @@ models, not one-shot ``build()`` scripts (cf. 3D-ICE 4.0's server mode).
     buffer; ``telemetry.snapshot()`` is the structured view the BENCH
     ``serving`` section and the CI soak consume.
 
+  * **Adaptive routing.** ``fidelity="auto"`` (default or per request)
+    answers through the certified router (``core/router.py``): the
+    oracle builds one ``RoutedThermalSimulator`` per (geometry, tol)
+    cache key — routing knobs fold into ``fidelity.cache_key``, so
+    auto-built models never alias hand-picked rungs — and every
+    response carries its ``route`` (chosen rung, certified error bound,
+    margin), which also lands as a telemetry route event.
+
 ``x64=True`` builds and executes every model under
 ``jax.experimental.enable_x64()`` *on the worker thread* (the flag is
 thread-local — a client-side context manager would not reach the
@@ -77,6 +85,10 @@ class OracleResponse:
             "error" (the solve raised; service stays live).
     value:  temps — (n_obs,) steady, (T, n_obs) transient, (T,) max-temp
             trace for DTPM; None unless answered.
+    route:  set when the answering model is the adaptive router
+            (``fidelity="auto"``): chosen rung, certified error bound,
+            accuracy target, margin, escalation count (see
+            ``core/router.py``); None for hand-picked rungs.
     """
     status: str
     value: Optional[np.ndarray] = None
@@ -88,6 +100,7 @@ class OracleResponse:
     occupancy: float = 0.0
     cg: Optional[dict] = None
     info: Optional[dict] = None       # DTPM per-request telemetry
+    route: Optional[dict] = None      # adaptive-router route event
 
     @property
     def ok(self) -> bool:
@@ -406,9 +419,15 @@ class ThermalOracle:
         start = time.monotonic()
         model, hit, build_s = self._model(req0)
         kind = req0.kind
+        slot_routes: Optional[list] = None
         if kind == "steady":
-            values = [np.asarray(model.observe(
-                model.steady_state(p.req.payload["q"]))) for p in group]
+            # per-slot solves: capture the router's route per slot (a
+            # hand-picked rung has no last_route -> None, no event)
+            values, slot_routes = [], []
+            for p in group:
+                values.append(np.asarray(model.observe(
+                    model.steady_state(p.req.payload["q"]))))
+                slot_routes.append(getattr(model, "last_route", None))
         elif kind == "transient":
             values = self._answer_transient(model, group)
         elif kind == "dtpm":
@@ -419,26 +438,47 @@ class ThermalOracle:
             values = self._answer_family_transient(model, group)
         else:  # unreachable: submit_* constrain kinds
             raise ValueError(f"unknown request kind {kind!r}")
+        if slot_routes is None:
+            slot_routes = self._routes_of(model, kind, len(group))
         cg = self._cg_summary(model)
         degraded = cg is not None and not cg["converged"]
         done = time.monotonic()
         occupancy = len(group) / self.capacity
-        for p, value in zip(group, values):
+        for i, (p, value) in enumerate(zip(group, values)):
             info = None
             if isinstance(value, tuple):   # dtpm: (trace, telemetry)
                 value, info = value
+            route = slot_routes[i] if i < len(slot_routes) else None
             resp = OracleResponse(
                 status="degraded" if degraded else "ok", value=value,
                 detail="CG hit its iteration cap — results may be "
                        "unconverged (see cg)" if degraded else "",
                 latency_s=done - p.enq_t, queue_s=start - p.enq_t,
-                cache_hit=hit, occupancy=occupancy, cg=cg, info=info)
+                cache_hit=hit, occupancy=occupancy, cg=cg, info=info,
+                route=route)
             p.fulfill(resp)
             self.telemetry.record(
                 kind=kind, status=resp.status, latency_s=resp.latency_s,
                 queue_s=resp.queue_s, queue_depth=p.queue_depth,
                 occupancy=occupancy, cache_hit=hit, cg=cg,
-                build_s=build_s)
+                build_s=build_s,
+                **({"route": route} if route else {}))
+
+    @staticmethod
+    def _routes_of(model, kind: str, n_slots: int) -> list:
+        """Per-slot route events of an adaptive-router answer: the
+        routed batched rollout records one route per slot
+        (``last_batch_routes``); family kinds share the one certified
+        template-probe route; hand-picked rungs record nothing."""
+        if kind == "transient":
+            batch = getattr(model, "last_batch_routes", None)
+            if batch is not None:
+                return list(batch)
+        if kind.startswith("family"):
+            shared = getattr(model, "last_route", None)
+            if shared is not None:
+                return [shared] * n_slots
+        return [None] * n_slots
 
     # --- per-kind batch answers (fixed capacity, padded slots) --------
     def _answer_transient(self, model, group) -> list:

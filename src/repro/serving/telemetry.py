@@ -16,6 +16,19 @@ depth and batch occupancy, the attached cache's hit/miss/byte stats,
 and the process-wide per-site unconverged-CG counters that the
 rate-limited ``warn_unconverged`` accumulates
 (``kernels/fused_cg/ops.unconverged_counts``).
+
+Requests answered through the adaptive fidelity router
+(``fidelity="auto"``, ``core/router.py``) additionally land a ``route``
+sub-dict on their event — chosen rung, certified observation-error
+bound, accuracy target and margin — which ``snapshot()`` reduces into a
+``router`` block: answer counts per rung, escalation total, and the
+tightest certificate margin in the window.
+
+Edge-case contract (pinned by ``tests/test_telemetry.py``): percentiles
+are well-defined at EVERY sample count — an empty ring yields an empty
+``latency`` map and NaN depth/occupancy means (never IndexError, never
+a misleading 0.0), a single-sample kind reports that sample as both p50
+and p99, and two samples interpolate.
 """
 from __future__ import annotations
 
@@ -27,9 +40,16 @@ import numpy as np
 
 
 def _percentile(values: List[float], q: float) -> float:
+    """Percentile that is well-defined at every sample count: NaN for an
+    empty list (never IndexError, never a misleading 0.0), the sample
+    itself for n=1, linear interpolation for n>=2 — so a p99 over one or
+    two samples reports a real latency, not an artifact."""
     if not values:
         return float("nan")
-    return float(np.percentile(np.asarray(values, np.float64), q))
+    vals = np.asarray(values, np.float64)
+    if vals.size == 1:
+        return float(vals[0])
+    return float(np.percentile(vals, q))
 
 
 class Telemetry:
@@ -72,6 +92,7 @@ class Telemetry:
             submitted = self.submitted
         by_kind: Dict[str, List[float]] = {}
         depths, occs = [], []
+        routed: List[dict] = []
         answered = 0
         for e in events:
             if e["status"] in ("ok", "degraded"):
@@ -79,23 +100,51 @@ class Telemetry:
                 depths.append(e["queue_depth"])
                 occs.append(e["occupancy"])
                 answered += 1
+            if e.get("route"):
+                routed.append(e["route"])
         latency = {
             kind: {"p50_s": _percentile(vals, 50),
                    "p99_s": _percentile(vals, 99),
                    "mean_s": float(np.mean(vals)), "n": len(vals)}
             for kind, vals in sorted(by_kind.items())}
+        # a window with no answered requests has NO mean depth/occupancy:
+        # report NaN (format-safe for the %.2f consumers), never a 0.0
+        # that reads as "idle queue, empty batches"
         snap = {
             "submitted": submitted,
             "completed": int(sum(counts.values())),
             "by_status": counts,
             "latency": latency,
             "mean_queue_depth": float(np.mean(depths)) if depths
-            else 0.0,
+            else float("nan"),
             "mean_batch_occupancy": float(np.mean(occs)) if occs
-            else 0.0,
+            else float("nan"),
             "ring_events": len(events),
             "cg_unconverged_sites": unconverged_counts(),
         }
+        if routed:
+            snap["router"] = self._reduce_routes(routed)
         if self.cache is not None:
             snap["cache"] = self.cache.stats()
         return snap
+
+    @staticmethod
+    def _reduce_routes(routed: List[dict]) -> dict:
+        """Aggregate the adaptive-fidelity route events in the window:
+        how often each rung answered, total escalations, and the
+        tightest certificate margin (tol - certified; negative would
+        mean an accepted answer outside its accuracy target)."""
+        by_rung: Dict[str, int] = {}
+        margins = []
+        escalations = 0
+        for r in routed:
+            by_rung[r["rung"]] = by_rung.get(r["rung"], 0) + 1
+            escalations += int(r.get("escalations", 0))
+            if r.get("margin") is not None:
+                margins.append(float(r["margin"]))
+        return {"n_routed": len(routed), "by_rung": by_rung,
+                "escalations": escalations,
+                "min_margin": min(margins) if margins else None,
+                "worst_certified": max(
+                    (float(r["certified"]) for r in routed
+                     if r.get("certified") is not None), default=None)}

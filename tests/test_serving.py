@@ -233,8 +233,12 @@ def test_client_side_result_timeout_raises():
 # ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------
-def test_telemetry_snapshot_shape_and_lru_eviction_counters():
-    cache = ModelCache(max_bytes=1)        # every insert evicts the last
+def test_telemetry_snapshot_shape_and_rejected_oversized_counters():
+    # a 1-byte budget makes EVERY model oversized: the cache must refuse
+    # to retain them (rejected counter) rather than pinning one entry
+    # forever while evicting the rest — the service still answers every
+    # query from the handed-off in-flight build
+    cache = ModelCache(max_bytes=1)
     with ThermalOracle(fidelity="rom", capacity=2, cache=cache,
                        build_opts=ROM_OPTS) as oracle:
         q = np.full(4, 3.0)
@@ -246,6 +250,7 @@ def test_telemetry_snapshot_shape_and_lru_eviction_counters():
     lat = snap["latency"]["steady"]
     assert lat["n"] == 2 and 0 < lat["p50_s"] <= lat["p99_s"]
     assert 0 < snap["mean_batch_occupancy"] <= 1.0
-    assert snap["cache"]["entries"] == 1   # byte budget forced eviction
-    assert snap["cache"]["evictions"] >= 1
+    assert snap["cache"]["entries"] == 0   # nothing oversized retained
+    assert snap["cache"]["rejected"] >= 2
+    assert snap["cache"]["bytes"] == 0         # accounting stays exact
     assert isinstance(snap["cg_unconverged_sites"], dict)

@@ -129,10 +129,66 @@ def test_lru_eviction_respects_budget_and_recency():
     assert stats["evictions"] == 1
     assert cache.get("b") is None        # the stale one went
     assert cache.get("a") is not None and cache.get("d") is not None
-    # an oversized newest entry still lands (service must answer)
-    cache.put("huge", _blob(4096))
-    assert cache.get("huge") is not None
-    assert cache.stats()["bytes"] <= 4096 * 1024 + 8
+    assert cache.stats()["bytes"] <= cache.max_bytes
+
+
+def test_oversized_entry_rejected_not_resident_forever():
+    """Regression: an entry larger than the whole budget used to be
+    admitted, evict every other resident model, and then stay resident
+    (the ``len > 1`` guard stopped eviction at the oversized newcomer).
+    It must be rejected instead, leaving the working set untouched and
+    the byte accounting exact."""
+    cache = ModelCache(max_bytes=1024 * 1024)            # 1 MB
+    cache.put("a", _blob(256))
+    cache.put("b", _blob(256))
+    retained = cache.put("huge", _blob(4096))            # 4 MB > budget
+    assert retained is False
+    assert cache.get("huge") is None                     # never admitted
+    assert cache.get("a") is not None                    # survivors stay
+    assert cache.get("b") is not None
+    stats = cache.stats()
+    assert stats["rejected"] == 1 and stats["evictions"] == 0
+    assert stats["bytes"] == 2 * 256 * 1024   # exact, not drifted
+    assert stats["bytes"] <= cache.max_bytes
+
+
+def test_put_overwrite_keeps_byte_accounting_exact():
+    cache = ModelCache(max_bytes=10 * 1024 * 1024)
+    cache.put("k", _blob(512))
+    cache.put("k", _blob(128))           # overwrite releases old bytes
+    assert cache.stats()["bytes"] == 128 * 1024
+    assert len(cache) == 1
+
+
+def test_get_or_build_hands_oversized_value_to_waiters():
+    """Dedup must survive rejection: racing builders of one oversized
+    key all get the built value, the builder runs once, and the cache
+    stays empty."""
+    cache = ModelCache(max_bytes=1024)   # tiny budget: everything rejects
+    calls = []
+    gate = threading.Event()
+
+    def builder():
+        gate.wait(5.0)
+        calls.append(1)
+        return _blob(64)                 # 64 KB >> 1 KB budget
+
+    results = []
+
+    def worker():
+        results.append(cache.get_or_build("k", builder))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    gate.set()
+    for t in threads:
+        t.join(10.0)
+    assert len(calls) == 1
+    assert len(results) == 4
+    assert len({id(model) for model, _, _ in results}) == 1
+    assert len(cache) == 0
+    assert cache.stats()["rejected"] == 1
 
 
 def test_get_or_build_runs_builder_once_across_threads():

@@ -136,3 +136,71 @@ def test_solver_knobs_are_part_of_the_key(pkg, knob):
     name, v1, v2 = knob
     assert cache_key(pkg, "rom", {name: v1}) != \
         cache_key(pkg, "rom", {name: v2})
+
+
+# ---------------------------------------------------------------------------
+# adaptive-router keys (ISSUE 8 satellite): auto-built models must cache
+# per (geometry, tol, routing knobs) — order-free, knob-sensitive, and
+# never aliasing a hand-picked rung
+# ---------------------------------------------------------------------------
+@st.composite
+def routing_opts(draw):
+    """A realistic ``build(pkg, "auto", ...)`` opts dict spanning every
+    routing knob, nested ``rom_opts`` (with rational-Krylov tuples)
+    included."""
+    opts = {"tol": draw(st.sampled_from([1e-1, 1e-2, 1e-3, 1e-4])),
+            "ts": draw(st.sampled_from([0.01, 0.02]))}
+    if draw(st.booleans()):
+        opts["solver"] = draw(st.sampled_from(["auto", "dense", "cg"]))
+    if draw(st.booleans()):
+        opts["rom_opts"] = {
+            "r": draw(st.sampled_from([64, 84])),
+            "n_moments": draw(st.sampled_from([6, (5, 1)])),
+            "shifts": draw(st.sampled_from([(0.0,), (0.0, 100.0)])),
+        }
+    return opts
+
+
+@given(packages(), routing_opts(), st.randoms())
+@settings(max_examples=25, deadline=None)
+def test_auto_key_invariant_under_opts_insertion_order(pkg, opts, rng):
+    items = list(opts.items())
+    rng.shuffle(items)
+    shuffled = dict(items)
+    if "rom_opts" in shuffled:
+        nested = list(shuffled["rom_opts"].items())
+        rng.shuffle(nested)
+        shuffled["rom_opts"] = dict(nested)
+    assert cache_key(pkg, "auto", shuffled) == \
+        cache_key(pkg, "auto", opts)
+
+
+@given(packages(), routing_opts())
+@settings(max_examples=25, deadline=None)
+def test_auto_key_sensitive_to_every_routing_knob(pkg, opts):
+    base = cache_key(pkg, "auto", opts)
+    perturbed = [
+        {**opts, "tol": opts["tol"] * 0.5},
+        {**opts, "ts": opts["ts"] * 2.0},
+        {**opts, "solver": "cg" if opts.get("solver") != "cg"
+         else "dense"},
+        {**opts, "rom_opts": {**opts.get("rom_opts", {}),
+                              "shifts": (0.0, 50.0)}},
+        {**opts, "rom_opts": {**opts.get("rom_opts", {}),
+                              "n_moments": (4, 2)}},
+    ]
+    keys = {cache_key(pkg, "auto", p) for p in perturbed}
+    assert base not in keys and len(keys) == len(perturbed)
+
+
+@given(packages(), st.sampled_from(["rom", "rc", "dss", "fvm"]))
+@settings(max_examples=10, deadline=None)
+def test_auto_key_never_aliases_hand_picked_rungs(pkg, rung):
+    """``"auto"`` at ANY tol shares no key with any explicitly built
+    rung — a routed entry can never shadow (or be shadowed by) a
+    hand-picked model in the serving cache."""
+    auto = {cache_key(pkg, "auto", {"tol": t})
+            for t in (1e-1, 1e-2, 1e-3)}
+    assert len(auto) == 3
+    assert cache_key(pkg, rung, {}) not in auto
+    assert cache_key(pkg, rung, {"ts": 0.01}) not in auto

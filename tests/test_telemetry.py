@@ -1,0 +1,112 @@
+"""Serving telemetry edge cases (PR 8 bugfix bar).
+
+``Telemetry.snapshot`` must be well-defined at every sample count: an
+empty ring (fresh service, or a window of nothing but errors), a kind
+with exactly one answered request, and a kind with two. Historically an
+empty window reported ``mean_queue_depth == 0.0`` — indistinguishable
+from a genuinely idle queue — and small-n percentiles were untested.
+"""
+import math
+
+import numpy as np
+
+from repro.serving.telemetry import Telemetry, _percentile
+
+
+# ---------------------------------------------------------------------------
+# _percentile
+# ---------------------------------------------------------------------------
+def test_percentile_empty_is_nan_not_error():
+    assert math.isnan(_percentile([], 50))
+    assert math.isnan(_percentile([], 99))
+
+
+def test_percentile_single_sample_is_the_sample():
+    assert _percentile([0.25], 50) == 0.25
+    assert _percentile([0.25], 99) == 0.25
+
+
+def test_percentile_two_samples_interpolates_within_range():
+    p50 = _percentile([1.0, 3.0], 50)
+    p99 = _percentile([1.0, 3.0], 99)
+    assert p50 == 2.0
+    assert 1.0 <= p50 <= p99 <= 3.0
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+def _record_ok(t: Telemetry, kind: str, latency: float) -> None:
+    t.record(kind=kind, status="ok", latency_s=latency,
+             queue_depth=2, occupancy=0.5)
+
+
+def test_snapshot_empty_ring_well_defined():
+    snap = Telemetry().snapshot()
+    assert snap["latency"] == {}
+    assert snap["completed"] == 0 and snap["submitted"] == 0
+    # NaN, not 0.0: "no data" must not read as "idle queue"
+    assert math.isnan(snap["mean_queue_depth"])
+    assert math.isnan(snap["mean_batch_occupancy"])
+
+
+def test_snapshot_error_only_window_has_no_latency_stats():
+    t = Telemetry()
+    t.record(kind="steady", status="error", latency_s=0.1)
+    snap = t.snapshot()
+    assert snap["latency"] == {}          # errors never enter latency
+    assert snap["by_status"] == {"error": 1}
+    assert math.isnan(snap["mean_queue_depth"])
+
+
+def test_snapshot_single_sample_kind():
+    t = Telemetry()
+    _record_ok(t, "steady", 0.125)
+    snap = t.snapshot()
+    lat = snap["latency"]["steady"]
+    assert lat["n"] == 1
+    assert lat["p50_s"] == lat["p99_s"] == lat["mean_s"] == 0.125
+    assert snap["mean_queue_depth"] == 2.0
+    assert snap["mean_batch_occupancy"] == 0.5
+
+
+def test_snapshot_two_sample_kind():
+    t = Telemetry()
+    _record_ok(t, "transient", 0.1)
+    _record_ok(t, "transient", 0.3)
+    lat = t.snapshot()["latency"]["transient"]
+    assert lat["n"] == 2
+    assert lat["p50_s"] == np.mean([0.1, 0.3])
+    assert 0.1 <= lat["p50_s"] <= lat["p99_s"] <= 0.3
+
+
+def test_snapshot_mixed_kinds_each_well_defined():
+    t = Telemetry()
+    _record_ok(t, "steady", 0.1)                  # n=1 kind
+    _record_ok(t, "transient", 0.2)               # n=2 kind
+    _record_ok(t, "transient", 0.4)
+    lat = t.snapshot()["latency"]
+    assert set(lat) == {"steady", "transient"}
+    assert all(not math.isnan(v["p99_s"]) for v in lat.values())
+
+
+def test_snapshot_reduces_route_events():
+    t = Telemetry()
+    t.record(kind="steady", status="ok", latency_s=0.1,
+             route={"rung": "rom", "certified": 2e-4, "tol": 1e-2,
+                    "margin": 1e-2 - 2e-4, "escalations": 0})
+    t.record(kind="transient", status="ok", latency_s=0.2,
+             route={"rung": "dss", "certified": 1e-8, "tol": 1e-3,
+                    "margin": 1e-3 - 1e-8, "escalations": 1})
+    router = t.snapshot()["router"]
+    assert router["n_routed"] == 2
+    assert router["by_rung"] == {"rom": 1, "dss": 1}
+    assert router["escalations"] == 1
+    assert router["min_margin"] == 1e-3 - 1e-8
+    assert router["worst_certified"] == 2e-4
+
+
+def test_snapshot_without_routes_has_no_router_block():
+    t = Telemetry()
+    _record_ok(t, "steady", 0.1)
+    assert "router" not in t.snapshot()

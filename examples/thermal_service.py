@@ -13,21 +13,33 @@ continuous-batching idiom of ``launch/serve.py``, productionized in
 every outcome — success, deadline miss, queue overflow, unconverged
 solve — as a structured response.
 
+Since ISSUE 9 the service is also *self-healing*: a supervised worker
+restarts and re-drives in-flight requests after a crash, per-rung
+circuit breakers drop failing rungs out of the auto-router's ladder,
+non-finite solver output falls back to the reference path with a
+structured ``fallback`` record, and a crash-safe on-disk cache tier
+persists the ROM basis across process restarts (sections 7–8 below).
+
 Run:  PYTHONPATH=src python examples/thermal_service.py
 """
+import tempfile
 import threading
 import time
 
 import numpy as np
 
 from repro.core import PackageFamily, make_2p5d_package
-from repro.serving import ThermalOracle
+from repro.serving import DiskCache, ThermalOracle
+from repro.testing import faults
 
 # ---------------------------------------------------------------------------
-# 1. stand up the service and warm the model cache
+# 1. stand up the service and warm the model cache (disk-backed: the ROM
+#    basis is persisted so a process restart skips the build, section 7)
 # ---------------------------------------------------------------------------
 pkg = make_2p5d_package(16)
-oracle = ThermalOracle(fidelity="rom", capacity=8, default_deadline_s=30.0)
+disk = DiskCache(tempfile.mkdtemp(prefix="mfit-diskcache-"))
+oracle = ThermalOracle(fidelity="rom", capacity=8, default_deadline_s=30.0,
+                       disk=disk)
 
 t0 = time.perf_counter()
 key, hit, build_s = oracle.warm(pkg)            # one-time ROM build
@@ -114,3 +126,42 @@ print(f"\ntelemetry: {snap['submitted']} submitted, by_status "
       f"{snap['cache']['entries']} entries / "
       f"{snap['cache']['hit_rate']:.0%} hit rate")
 oracle.close()
+
+# ---------------------------------------------------------------------------
+# 7. crash-safe restart: a fresh process warm-loads the basis from disk
+# ---------------------------------------------------------------------------
+o2 = ThermalOracle(fidelity="rom", capacity=8, disk=disk, autostart=False)
+_, mem_hit, warm_s = o2.warm(pkg)           # memory cache is COLD here
+r = o2.start().query_steady(pkg, np.full(16, 3.0))
+print(f"\nrestart: in-memory cache cold (hit={mem_hit}) but the ROM basis "
+      f"came off disk in {warm_s*1e3:.0f} ms vs the {build_s:.2f}s cold "
+      f"build ({build_s/warm_s:.0f}x), answer status {r.status!r} — "
+      f"entries are checksum-gated and atomically published, so a torn or "
+      f"corrupted file is quarantined and rebuilt, never served")
+o2.close()
+
+# ---------------------------------------------------------------------------
+# 8. self-healing under injected faults: the auto-router's circuit
+#    breaker drops a failing rung out of the ladder, then recovers
+# ---------------------------------------------------------------------------
+small = make_2p5d_package(4)
+o3 = ThermalOracle(fidelity="auto", capacity=4,
+                   build_opts={"tol": 1e-2, "rom_opts": {"n_moments": 2},
+                               "breaker_threshold": 3,
+                               "breaker_cooldown_s": 0.5})
+q = np.full(4, 3.0)
+with faults.injected({"router.steady.rom":
+                      faults.FaultSpec(mode="raise", times=5)}):
+    rungs = [o3.query_steady(small, q).route["rung"] for _ in range(5)]
+router_snap = o3.telemetry.snapshot()["router"]
+print(f"\n5 steady queries with the rom rung poisoned: every answer came "
+      f"certified from {sorted(set(rungs))} — rom failed "
+      f"{router_snap['rung_failures']['rom']}x, "
+      f"{router_snap['breaker_trips']} breaker trip, then "
+      f"{router_snap['breaker_skips']['rom']} queries skipped rom without "
+      f"paying for the failure")
+time.sleep(0.6)                              # cooldown -> half-open probe
+healed = o3.query_steady(small, q)
+print(f"after the cooldown the half-open probe succeeds: rung "
+      f"{healed.route['rung']!r} serves again (status {healed.status!r})")
+o3.close()

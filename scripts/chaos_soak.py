@@ -1,0 +1,181 @@
+"""Chaos soak: hammer the thermal oracle with threaded clients UNDER A
+SEEDED FAULT SCHEDULE for ~30 s and assert the self-healing contract.
+
+On top of the plain serving soak (``scripts/serving_soak.py``), this run
+keeps a deterministic fault plan installed the whole time:
+
+  * ``serving.worker``   — the batcher worker thread crashes with work
+                           in flight (supervisor restart + re-drive);
+  * ``rom.steady`` / ``rom.transient`` — NaN poison on the fast solve
+                           paths (numerical guardrail -> reference path);
+  * ``serving.answer``   — occasional mid-batch stalls (deadline storms
+                           against the per-request deadlines).
+
+Asserted invariants (exit 1 on any violation):
+  * zero hangs    — every submitted request resolves well inside its
+                    client-side wait; no DROPPED entries;
+  * zero crashes  — the process and the service survive; the oracle
+                    still answers a healthy probe after the storm;
+  * zero silently-wrong answers — every ok/degraded/retried steady
+                    response is parity-checked against a direct
+                    ``build()`` reference for its geometry (answers that
+                    took a guardrail fallback or a supervisor re-drive
+                    must still be RIGHT, and say so);
+  * structured failures only — every non-ok status is one of the
+                    documented terminal statuses;
+  * bounded RSS   — growth over the soak stays under the budget.
+
+Run:  PYTHONPATH=src python scripts/chaos_soak.py [--seconds 30]
+"""
+import argparse
+import collections
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import make_2p5d_package                  # noqa: E402
+from repro.core.fidelity import build                     # noqa: E402
+from repro.serving import ThermalOracle                   # noqa: E402
+from repro.testing import faults                          # noqa: E402
+
+S = 4
+T = 30
+Q_PROBE = 3.0          # every steady request uses this q: parity is a
+                       # table lookup, not a per-request reference solve
+STRUCTURED = ("ok", "degraded", "retried", "timeout", "overflow",
+              "error", "failed", "shutdown")
+
+
+def client(oracle, pkgs, stop_at, results, idx):
+    n = 0
+    while time.monotonic() < stop_at:
+        pkg = pkgs[(n // 8) % len(pkgs)]
+        if n % 3 == 2:
+            pend = oracle.submit_transient(
+                pkg, np.full((T, S), 2.0), 0.01, deadline_s=30.0)
+            kind = "transient"
+        else:
+            pend = oracle.submit_steady(pkg, np.full(S, Q_PROBE),
+                                        deadline_s=30.0)
+            kind = "steady"
+        try:
+            # generous client-side wait: a hit means a HUNG future,
+            # exactly what the supervisor exists to make impossible
+            resp = pend.result(timeout=120)
+            results[idx].append((kind, (n // 8) % len(pkgs), resp))
+        except TimeoutError:
+            results[idx].append((kind, (n // 8) % len(pkgs), None))
+        n += 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=30.0)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rss-budget-mb", type=float, default=800.0)
+    args = ap.parse_args(argv)
+
+    import psutil
+    proc = psutil.Process()
+
+    pkgs = [make_2p5d_package(S), make_2p5d_package(S, htc_top=9000.0)]
+    # parity references from the DIRECT build path, outside the service
+    refs = []
+    for pkg in pkgs:
+        m = build(pkg, "rom", n_moments=2, ts=0.01)
+        refs.append(np.asarray(m.observe(
+            m.steady_state(np.full(S, Q_PROBE)))))
+
+    oracle = ThermalOracle(fidelity="rom", capacity=8, max_queue=4096,
+                           build_opts={"n_moments": 2, "ts": 0.01})
+    for pkg in pkgs:      # warm models + executables before the storm
+        oracle.query_steady(pkg, np.full(S, Q_PROBE))
+        oracle.query_transient(pkg, np.full((T, S), 2.0), 0.01)
+    rss0 = proc.memory_info().rss / 1e6
+
+    plan = faults.FaultPlan(seed=args.seed, specs={
+        "serving.worker": faults.FaultSpec(mode="raise", p=0.01),
+        "rom.steady": faults.FaultSpec(mode="nan", p=0.05),
+        "rom.transient": faults.FaultSpec(mode="inf", p=0.05),
+        "serving.answer": faults.FaultSpec(mode="delay", p=0.02,
+                                           delay_s=0.05),
+    })
+    faults.install(plan)
+    stop_at = time.monotonic() + args.seconds
+    results = [[] for _ in range(args.clients)]
+    threads = [threading.Thread(target=client,
+                                args=(oracle, pkgs, stop_at, results, i))
+               for i in range(args.clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    faults.clear()
+
+    # the service must still answer a HEALTHY probe after the storm
+    survivor = oracle.query_steady(pkgs[0], np.full(S, Q_PROBE))
+    snap = oracle.telemetry.snapshot()
+    oracle.shutdown()
+    rss1 = proc.memory_info().rss / 1e6
+
+    flat = [r for rs in results for r in rs]
+    by_status = collections.Counter(
+        "DROPPED" if resp is None else resp.status
+        for _, _, resp in flat)
+    n_fallback = sum(1 for _, _, resp in flat
+                     if resp is not None and resp.fallback)
+    print(f"chaos soak: {len(flat)} requests over {wall:.1f}s "
+          f"({len(flat)/wall:.0f} req/s, {args.clients} clients, "
+          f"seed {args.seed})")
+    print(f"  by_status: {dict(by_status)}")
+    print(f"  faults fired: {dict(plan.fired)}")
+    print(f"  guardrail fallbacks on responses: {n_fallback}")
+    print(f"  supervisor: {snap.get('supervisor')}")
+    print(f"  rss: {rss0:.0f} -> {rss1:.0f} MB (+{rss1-rss0:.0f})")
+
+    failures = []
+    if not flat:
+        failures.append("no requests completed")
+    if by_status.get("DROPPED"):
+        failures.append(f"HUNG futures: {by_status['DROPPED']} requests "
+                        "never resolved (the supervisor contract)")
+    weird = {s: n for s, n in by_status.items() if s not in STRUCTURED
+             and s != "DROPPED"}
+    if weird:
+        failures.append(f"non-structured statuses: {weird}")
+    # zero silently-wrong: every answered steady response matches the
+    # direct-build reference (fallback/retried answers included)
+    wrong = 0
+    for kind, which, resp in flat:
+        if kind == "steady" and resp is not None and resp.ok \
+                and resp.value is not None:
+            if not np.allclose(resp.value, refs[which], atol=1e-5):
+                wrong += 1
+    if wrong:
+        failures.append(f"silently-wrong steady answers: {wrong}")
+    if not survivor.ok:
+        failures.append(f"service did not survive the storm: "
+                        f"{survivor.status}: {survivor.detail}")
+    if plan.fired.get("serving.worker", 0) < 1:
+        failures.append("no worker crashes fired — the schedule did "
+                        "not exercise the supervisor")
+    if rss1 - rss0 > args.rss_budget_mb:
+        failures.append(f"RSS grew {rss1-rss0:.0f} MB "
+                        f"(budget {args.rss_budget_mb:.0f} MB)")
+    if failures:
+        print("CHAOS SOAK FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print("CHAOS SOAK PASSED: zero hangs, zero crashes, zero "
+          "silently-wrong answers, bounded RSS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

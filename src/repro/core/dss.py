@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.dss_step.ops import dss_rollout, dss_step
+from ..kernels.fused_cg.ops import all_finite, record_fallback
+from ..testing import faults
 from .fidelity import (register_family_fidelity,
                        register_fidelity)
 from .geometry import Package
@@ -76,6 +78,10 @@ class DSSModel:
     steady_fn: Optional[callable] = dataclasses.field(default=None,
                                                       repr=False)
     _regen_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    # numerical guardrail: structured record of the most recent solve's
+    # promotion to the dense/reference path (None = primary path)
+    last_fallback: Optional[dict] = dataclasses.field(default=None,
+                                                      repr=False)
 
     fidelity = "dss"
 
@@ -96,10 +102,37 @@ class DSSModel:
 
     def simulate(self, theta0: jnp.ndarray, q_traj: jnp.ndarray,
                  backend: str = "auto") -> jnp.ndarray:
-        """theta0 (N,), q_traj (T, S) -> chiplet temps (T, n_obs)."""
+        """theta0 (N,), q_traj (T, S) -> chiplet temps (T, n_obs).
+
+        Numerical guardrail: NaN/Inf rollout output (e.g. f32 overflow
+        on a stiff pencil) promotes to the host-f64 exact-ZOH reference
+        rollout of the retained continuous-time system, recorded in
+        ``last_fallback`` instead of propagating poison."""
         thetas = dss_rollout(theta0[None], q_traj[:, None, :], self.ad_t,
                              self.bd_t, backend=backend)[:, 0]
-        return thetas @ self.H.T + self.t_ambient
+        obs = thetas @ self.H.T + self.t_ambient
+        self.last_fallback = None
+        if not all_finite(faults.corrupt("dss.transient", obs)) \
+                and self.css is not None:
+            record_fallback("dss.transient")
+            obs = self._host_reference_rollout(theta0, q_traj)
+            self.last_fallback = {
+                "site": "dss.transient",
+                "to": "host-f64 exact-ZOH rollout",
+                "reason": "non-finite rollout output"}
+        return obs
+
+    def _host_reference_rollout(self, theta0, q_traj) -> np.ndarray:
+        """Guardrail reference: host-f64 exact ZOH of the retained
+        continuous-time arrays at the built ``ts``."""
+        ad, bd = zoh_discretize(self.css.a, self.css.b_src, self.ts)
+        th = np.asarray(theta0, np.float64)
+        q = np.asarray(q_traj, np.float64)
+        obs = np.empty((q.shape[0], self.css.h.shape[0]))
+        for k in range(q.shape[0]):
+            th = ad @ th + bd @ q[k]
+            obs[k] = self.css.h @ th
+        return obs + self.t_ambient
 
     def simulate_batch(self, theta0: jnp.ndarray, q_traj: jnp.ndarray,
                        dt: Optional[float] = None,
@@ -144,8 +177,20 @@ class DSSModel:
         point — solved matrix-free on the COO kernel, never forming an
         N x N system.
         """
+        self.last_fallback = None
         if self.steady_fn is not None:
-            return jnp.asarray(self.steady_fn(q_src), self.ad.dtype)
+            theta = faults.corrupt(
+                "dss.steady",
+                np.asarray(self.steady_fn(q_src), np.float64))
+            if np.isfinite(theta).all():
+                return jnp.asarray(theta, self.ad.dtype)
+            # numerical guardrail: poisoned CG output -> dense ZOH
+            # fixed point (mathematically the same steady state)
+            record_fallback("dss.steady")
+            self.last_fallback = {
+                "site": "dss.steady",
+                "to": "dense ZOH fixed-point solve",
+                "reason": "non-finite CG steady output"}
         ad = np.asarray(self.ad, np.float64)
         bd = np.asarray(self.bd, np.float64)
         q = np.asarray(q_src, np.float64)

@@ -286,6 +286,9 @@ def build(pkg, fidelity: str = "rc", **opts) -> "ThermalSimulator":
     if fidelity not in _REGISTRY:
         raise KeyError(f"unknown fidelity {fidelity!r}; available: "
                        f"{', '.join(sorted(_REGISTRY))}")
+    from .geometry import Package, validate_package
+    if isinstance(pkg, Package):
+        validate_package(pkg)      # precise errors, not a singular solve
     return _REGISTRY[fidelity](pkg, **opts)
 
 
@@ -314,4 +317,8 @@ def build_family(family, fidelity: str = "rc",
                 f"in a loop.")
         raise KeyError(f"unknown fidelity {fidelity!r}; available: "
                        f"{', '.join(sorted(_REGISTRY))}")
+    from .geometry import Package, validate_package
+    template = getattr(family, "template", None)
+    if isinstance(template, Package):
+        validate_package(template)
     return _FAMILY_REGISTRY[fidelity](family, **opts)

@@ -70,6 +70,69 @@ class Package:
 
 
 # ---------------------------------------------------------------------------
+# Input validation (the build()/build_family() front door)
+# ---------------------------------------------------------------------------
+def _pos_finite(v) -> bool:
+    return bool(np.isfinite(v)) and float(v) > 0.0
+
+
+def validate_package(pkg: "Package") -> None:
+    """Reject malformed geometry with a precise ``ValueError`` naming
+    the offending field, BEFORE it reaches discretization — a
+    non-positive thickness, negative HTC or NaN block coordinate would
+    otherwise surface as an opaque singular-Cholesky (or silently
+    poisoned) failure deep inside the solver tier. Called by
+    ``fidelity.build()`` / ``build_family()``; cost is O(blocks) host
+    scalar checks."""
+    where = f"Package {pkg.name!r}"
+    for field in ("length", "width"):
+        v = getattr(pkg, field)
+        if not _pos_finite(v):
+            raise ValueError(f"{where}: {field} must be a positive "
+                             f"finite extent in meters, got {v!r}")
+    for field in ("htc_top", "htc_bottom"):
+        v = getattr(pkg, field)
+        if not np.isfinite(v) or float(v) < 0.0:
+            raise ValueError(f"{where}: {field} must be a finite "
+                             f"non-negative HTC in W/m^2K, got {v!r}")
+    if float(pkg.htc_top) == 0.0 and float(pkg.htc_bottom) == 0.0:
+        raise ValueError(f"{where}: htc_top and htc_bottom are both 0 — "
+                         "a thermally floating package has no steady "
+                         "state (the conductance matrix is singular)")
+    if not np.isfinite(pkg.t_ambient):
+        raise ValueError(f"{where}: t_ambient must be finite, got "
+                         f"{pkg.t_ambient!r}")
+    if not pkg.layers:
+        raise ValueError(f"{where}: layers is empty — at least one "
+                         "layer is required")
+    for layer in pkg.layers:
+        lwhere = f"{where} layer {layer.name!r}"
+        if not _pos_finite(layer.thickness):
+            raise ValueError(f"{lwhere}: thickness must be > 0 and "
+                             f"finite, got {layer.thickness!r}")
+        if layer.nx < 1 or layer.ny < 1:
+            raise ValueError(f"{lwhere}: grid granularity nx/ny must "
+                             f"be >= 1, got nx={layer.nx}, ny={layer.ny}")
+        for b, blk in enumerate(layer.blocks):
+            bwhere = f"{lwhere} block[{b}]" + \
+                (f" ({blk.tag!r})" if blk.tag else "")
+            for field in ("x0", "y0", "x1", "y1"):
+                v = getattr(blk, field)
+                if not np.isfinite(v):
+                    raise ValueError(f"{bwhere}: coordinate {field} "
+                                     f"must be finite, got {v!r}")
+            if blk.x1 <= blk.x0 or blk.y1 <= blk.y0:
+                raise ValueError(
+                    f"{bwhere}: degenerate extent — requires x1 > x0 "
+                    f"and y1 > y0, got x=[{blk.x0!r}, {blk.x1!r}], "
+                    f"y=[{blk.y0!r}, {blk.y1!r}]")
+            if blk.nx < 1 or blk.ny < 1:
+                raise ValueError(f"{bwhere}: grid granularity nx/ny "
+                                 f"must be >= 1, got nx={blk.nx}, "
+                                 f"ny={blk.ny}")
+
+
+# ---------------------------------------------------------------------------
 # Canonical content hashing (the serving cache's identity of a geometry)
 # ---------------------------------------------------------------------------
 def content_token(obj) -> tuple:

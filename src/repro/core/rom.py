@@ -57,8 +57,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.fused_cg.ops import (fused_cg_plan, fused_cg_solve,
+from ..kernels.fused_cg.ops import (all_finite, fused_cg_plan,
+                                    fused_cg_solve, record_fallback,
                                     warn_unconverged)
+from ..testing import faults
 from .dss import family_zoh_simulate, zoh_discretize
 from .fidelity import (evict_stale_jits, register_family_fidelity,
                        register_fidelity, resolve_solver)
@@ -121,11 +123,24 @@ def _make_neg_g_solver(net: RCNetwork, solver: str,
                                   tol=cg_tol, maxiter=cg_maxiter,
                                   impl=cg_impl, backend=matvec_backend)
 
+    dense_fallback: list = []    # lazily built guardrail solver
+
     def solve_block(b):
         with jax.experimental.enable_x64():
             out, stats = solve(jnp.asarray(np.ascontiguousarray(b.T)))
             warn_unconverged(stats, "rom basis block CG")
-            return np.asarray(out, np.float64).T
+            res = faults.corrupt("rom.basis_solve",
+                                 np.asarray(out, np.float64).T)
+        if not np.isfinite(res).all():
+            # numerical guardrail: a poisoned CG output must not leak
+            # into the Krylov basis — promote this block to the dense
+            # Cholesky tier (built once, reused for later blocks)
+            record_fallback("rom.basis_solve")
+            if not dense_fallback:
+                dense_fallback.append(
+                    _make_neg_g_solver(net, "dense", shift=shift))
+            res = dense_fallback[0](b)
+        return res
 
     return solve_block
 
@@ -301,6 +316,11 @@ class ROMModel:
         self._cho = sla.cho_factor(-self.ghat)
         self._cho_solve = sla.cho_solve
         self._jits: dict = {}
+        # numerical guardrail state: the most recent solve's structured
+        # fallback record (None = answered on the primary path), and the
+        # lazily built dense full-order reference solver behind it
+        self.last_fallback: Optional[dict] = None
+        self._ref_solve = None
 
     # -- dimensions ---------------------------------------------------------
     @property
@@ -354,9 +374,39 @@ class ROMModel:
 
     def steady_state(self, q_src) -> jnp.ndarray:
         """Reduced steady state: solve ``-Ghat theta_hat = Phat q`` with
-        the prefactored r x r Cholesky (host float64)."""
-        rhs = self.phat @ np.asarray(q_src, np.float64)
-        return jnp.asarray(self._cho_solve(self._cho, rhs), self.dtype)
+        the prefactored r x r Cholesky (host float64).
+
+        Numerical guardrail: a NaN/Inf solve output is never returned —
+        it promotes to the dense full-order reference solve
+        ``(-G)^-1 P q`` (lazily factored once), C-projected back onto
+        the basis, with the structured record in ``last_fallback``
+        (surfaced by the serving layer as the response's ``fallback``).
+        """
+        q = np.asarray(q_src, np.float64)
+        rhs = self.phat @ q
+        th = faults.corrupt(
+            "rom.steady",
+            np.asarray(self._cho_solve(self._cho, rhs), np.float64))
+        self.last_fallback = None
+        if not np.isfinite(th).all():
+            record_fallback("rom.steady")
+            x_full = self._reference_steady(q)
+            # V'C x is the C-orthogonal projection (V'CV = I), so the
+            # observed answer is the reference path's, up to the ROM's
+            # own (certified-class) projection error
+            th = self.V.T @ (self.net.C * x_full)
+            self.last_fallback = {
+                "site": "rom.steady",
+                "to": "dense full-order steady solve",
+                "reason": "non-finite reduced solve output"}
+        return jnp.asarray(th, self.dtype)
+
+    def _reference_steady(self, q: np.ndarray) -> np.ndarray:
+        """Guardrail reference: full-order ``(-G)^-1 P q`` on the dense
+        Cholesky tier (host f64, factored once per model)."""
+        if self._ref_solve is None:
+            self._ref_solve = _make_neg_g_solver(self.net, "dense")
+        return self._ref_solve(self.net.P @ q)
 
     def observe(self, theta_hat) -> jnp.ndarray:
         """Absolute temperature at the observation tags (self.tags order)."""
@@ -406,7 +456,31 @@ class ROMModel:
                 return obs + t_amb
 
             self._jits[key] = simulate
-        return self._jits[key](theta0, q_traj)
+        out = self._jits[key](theta0, q_traj)
+        self.last_fallback = None
+        if not all_finite(faults.corrupt("rom.transient", out)):
+            # numerical guardrail: a poisoned/overflowed rollout (e.g.
+            # f32 on a stiff pencil) promotes to the host-f64 exact-ZOH
+            # reference rollout of the same reduced pencil
+            record_fallback("rom.transient")
+            out = self._host_rollout(theta0, q_traj, dt)
+            self.last_fallback = {
+                "site": "rom.transient",
+                "to": "host-f64 exact-ZOH rollout",
+                "reason": "non-finite batched rollout output"}
+        return out
+
+    def _host_rollout(self, theta0, q_traj, dt: float) -> np.ndarray:
+        """Guardrail reference rollout: host-f64 exact ZOH of the
+        reduced pencil, (B, r) x (T, B, S) -> (T, B, n_obs)."""
+        ad, bd = zoh_discretize(self._a, self._b, dt)
+        th = np.asarray(theta0, np.float64)
+        q = np.asarray(q_traj, np.float64)
+        obs = np.empty((q.shape[0], th.shape[0], self.hhat.shape[0]))
+        for k in range(q.shape[0]):
+            th = th @ ad.T + q[k] @ bd.T
+            obs[k] = th @ self.hhat.T
+        return obs + self.t_ambient
 
     # -- full-state recovery ------------------------------------------------
     def expand(self, theta_hat) -> np.ndarray:

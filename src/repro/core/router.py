@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.coo_matvec.ops import coo_matvec, coo_plan
+from ..testing import faults
 from .dss import EighZOH, zoh_discretize
 from .fidelity import (register_family_fidelity, register_fidelity,
                        resolve_solver)
@@ -346,6 +347,72 @@ class ErrorCertifier:
 
 
 # ---------------------------------------------------------------------------
+# Circuit breakers (self-healing rung selection)
+# ---------------------------------------------------------------------------
+class CircuitBreaker:
+    """Per-rung breaker: repeated solver failures open it so traffic
+    falls straight to the next certified rung without re-paying the
+    failing solve; after ``cooldown_s`` one half-open probe is allowed
+    — success closes the breaker, failure re-opens it for another
+    cooldown. States: "closed" -> "open" -> "half_open" -> ... .
+
+    The router is driven from the oracle's single worker thread, so the
+    state machine is deliberately lock-free; ``trips`` (transitions to
+    open) feed the telemetry ``router`` block via route events.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0):
+        if threshold < 1 or cooldown_s < 0:
+            raise ValueError("breaker threshold must be >= 1 and "
+                             "cooldown_s >= 0")
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.failures = 0          # consecutive failures while closed
+        self.trips = 0             # closed/half-open -> open transitions
+        self._state = "closed"
+        self._open_until = 0.0
+
+    @property
+    def state(self) -> str:
+        if self._state == "open" \
+                and time.monotonic() >= self._open_until:
+            return "half_open"     # cooldown elapsed: probe territory
+        return self._state
+
+    def allow(self) -> bool:
+        """May this query try the rung? Open rungs say no until their
+        cooldown elapses, then admit one half-open probe."""
+        if self._state == "closed":
+            return True
+        if self._state == "open" \
+                and time.monotonic() >= self._open_until:
+            self._state = "half_open"
+            return True
+        return self._state == "half_open"
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self._state = "closed"
+
+    def record_failure(self) -> bool:
+        """Count one failure; returns True when this call TRIPPED the
+        breaker open (a half-open probe failure re-opens immediately)."""
+        self.failures += 1
+        if self._state == "half_open" or self.failures >= self.threshold:
+            tripped = self._state != "open"
+            self._state = "open"
+            self._open_until = time.monotonic() + self.cooldown_s
+            if tripped:
+                self.trips += 1
+            return tripped
+        return False
+
+    def snapshot(self) -> dict:
+        return {"state": self.state, "failures": self.failures,
+                "trips": self.trips}
+
+
+# ---------------------------------------------------------------------------
 # Routed answers
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -357,9 +424,15 @@ class RoutedAnswer:
     certified: Optional[float]        # obs-error upper bound (None: fvm)
     tol: float                        # accuracy target it was held to
     escalations: int                  # rungs passed over (skip or fail)
-    tried: list                       # [{"rung", "certified"|"apriori"}]
+    tried: list                       # [{"rung", "certified"|"apriori"|
+                                      #   "error"|"breaker"}]
     overhead_s: float                 # routing + certification seconds
     state: Optional[np.ndarray] = None  # full-order steady state (N,)
+    #: False when the ladder was exhausted without any rung certifying
+    #: within tol (best-effort answer: lowest certificate wins, flagged
+    #: — never silently returned as certified) or the answering rung
+    #: carries no certificate at all (forced ``fvm``).
+    certified_ok: bool = True
 
     @property
     def margin(self) -> Optional[float]:
@@ -371,6 +444,7 @@ class RoutedAnswer:
         return {"kind": self.kind, "rung": self.rung,
                 "certified": self.certified, "tol": self.tol,
                 "margin": self.margin, "escalations": self.escalations,
+                "certified_ok": self.certified_ok,
                 "overhead_s": self.overhead_s, "tried": self.tried}
 
 
@@ -401,6 +475,8 @@ class RoutedThermalSimulator:
                  solver: str = "auto", cap_multipliers: Optional[dict] = None,
                  rom_opts: Optional[dict] = None,
                  cost_model: Optional[CostModel] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
                  dtype=jnp.float32):
         if tol <= 0:
             raise ValueError(f"tol must be > 0, got {tol}")
@@ -423,6 +499,17 @@ class RoutedThermalSimulator:
         self._apriori_transient: dict = {}     # (dt, T) -> cert per unit q
         self.last_route: Optional[dict] = None
         self.last_batch_routes: Optional[list] = None
+        # one breaker per rung, shared by the steady and transient
+        # ladders (a rung whose solver is sick is sick for both)
+        self._breakers = {
+            name: CircuitBreaker(breaker_threshold, breaker_cooldown_s)
+            for name in {*self.STEADY_LADDER, *self.TRANSIENT_LADDER,
+                         "fvm"}}
+
+    def breaker_states(self) -> dict:
+        """{rung: {"state", "failures", "trips"}} for telemetry."""
+        return {name: brk.snapshot()
+                for name, brk in sorted(self._breakers.items())}
 
     # -- rung construction (lazy, cached) ------------------------------
     def _rung(self, name: str):
@@ -542,31 +629,65 @@ class RoutedThermalSimulator:
         t0 = time.perf_counter()
         tol = self.tol if tol is None else float(tol)
         q = np.asarray(q, np.float64)
-        ladder = (rung,) if rung else tuple(self.cost.order(
+        forced = rung is not None
+        ladder = (rung,) if forced else tuple(self.cost.order(
             self.STEADY_LADDER, "steady", self.n))
         tried: list = []
         answer_s = 0.0
+        best = None     # (cert, name, x, obs, i): lowest-cert survivor
         for i, name in enumerate(ladder):
-            last = i == len(ladder) - 1
-            if rung is None and not last:
+            brk = self._breakers[name]
+            if not forced and not brk.allow():
+                tried.append({"rung": name, "breaker": "open"})
+                continue
+            if not forced and i < len(ladder) - 1:
                 est = self._apriori(name, "steady", q)
                 if est is not None and est > tol:
                     tried.append({"rung": name, "apriori": est})
                     continue
             ta = time.perf_counter()
-            x, obs, cert = self._steady_answer(name, q)
+            try:
+                faults.fire(f"router.steady.{name}")
+                x, obs, cert = self._steady_answer(name, q)
+                if not np.isfinite(np.asarray(obs, np.float64)).all():
+                    raise FloatingPointError(
+                        f"non-finite observation from rung {name!r}")
+            except Exception as exc:   # rung is sick: breaker + next rung
+                answer_s += time.perf_counter() - ta
+                if forced:
+                    raise              # explicit rung= bypasses healing
+                entry = {"rung": name,
+                         "error": f"{type(exc).__name__}: {exc}"}
+                if brk.record_failure():
+                    entry["breaker_tripped"] = True
+                tried.append(entry)
+                continue
             answer_s += time.perf_counter() - ta
+            brk.record_success()
             tried.append({"rung": name, "certified": cert})
-            if rung is not None or last or (cert is not None
-                                            and cert <= tol):
+            ok = cert is not None and cert <= tol
+            if forced or ok:
                 ans = RoutedAnswer(
                     value=obs, kind="steady", rung=name, certified=cert,
                     tol=tol, escalations=i, tried=tried,
                     overhead_s=time.perf_counter() - t0 - answer_s,
-                    state=x)
+                    state=x, certified_ok=ok)
                 self.last_route = ans.route
                 return ans
-        raise AssertionError("ladder exhausted")   # unreachable
+            if cert is not None and (best is None or cert < best[0]):
+                best = (cert, name, x, obs, i)
+        if best is None:               # every rung failed or was open
+            raise RuntimeError(
+                f"steady routing exhausted at tol={tol}: "
+                f"no rung produced an answer (tried={tried})")
+        cert, name, x, obs, i = best   # best effort, flagged — never
+        ans = RoutedAnswer(            # silently passed off as certified
+            value=obs, kind="steady", rung=name, certified=cert,
+            tol=tol, escalations=i, tried=tried,
+            overhead_s=time.perf_counter() - t0 - answer_s,
+            state=x, certified_ok=False)
+        self.last_route = ans.route
+        return ans
 
     def query_transient(self, q_traj, dt: Optional[float] = None,
                         tol: Optional[float] = None,
@@ -576,31 +697,66 @@ class RoutedThermalSimulator:
         tol = self.tol if tol is None else float(tol)
         dt = self.ts if dt is None else float(dt)
         q = np.asarray(q_traj, np.float64)
-        ladder = (rung,) if rung else tuple(self.cost.order(
+        forced = rung is not None
+        ladder = (rung,) if forced else tuple(self.cost.order(
             self.TRANSIENT_LADDER, "transient", self.n, q.shape[0]))
         tried: list = []
         answer_s = 0.0
+        best = None     # (cert, name, obs, i): lowest-cert survivor
         for i, name in enumerate(ladder):
-            last = i == len(ladder) - 1
-            if rung is None and not last and theta0 is None:
+            brk = self._breakers[name]
+            if not forced and not brk.allow():
+                tried.append({"rung": name, "breaker": "open"})
+                continue
+            if not forced and i < len(ladder) - 1 and theta0 is None:
                 est = self._apriori(name, "transient", q, dt=dt,
                                     n_steps=q.shape[0])
                 if est is not None and est > tol:
                     tried.append({"rung": name, "apriori": est})
                     continue
             ta = time.perf_counter()
-            obs, cert = self._transient_answer(name, q, dt, theta0)
+            try:
+                faults.fire(f"router.transient.{name}")
+                obs, cert = self._transient_answer(name, q, dt, theta0)
+                if not np.isfinite(np.asarray(obs, np.float64)).all():
+                    raise FloatingPointError(
+                        f"non-finite observation from rung {name!r}")
+            except Exception as exc:   # rung is sick: breaker + next rung
+                answer_s += time.perf_counter() - ta
+                if forced:
+                    raise              # explicit rung= bypasses healing
+                entry = {"rung": name,
+                         "error": f"{type(exc).__name__}: {exc}"}
+                if brk.record_failure():
+                    entry["breaker_tripped"] = True
+                tried.append(entry)
+                continue
             answer_s += time.perf_counter() - ta
+            brk.record_success()
             tried.append({"rung": name, "certified": cert})
-            if rung is not None or last or (cert is not None
-                                            and cert <= tol):
+            ok = cert is not None and cert <= tol
+            if forced or ok:
                 ans = RoutedAnswer(
                     value=obs, kind="transient", rung=name,
                     certified=cert, tol=tol, escalations=i, tried=tried,
-                    overhead_s=time.perf_counter() - t0 - answer_s)
+                    overhead_s=time.perf_counter() - t0 - answer_s,
+                    certified_ok=ok)
                 self.last_route = ans.route
                 return ans
-        raise AssertionError("ladder exhausted")   # unreachable
+            if cert is not None and (best is None or cert < best[0]):
+                best = (cert, name, obs, i)
+        if best is None:               # every rung failed or was open
+            raise RuntimeError(
+                f"transient routing exhausted at tol={tol}: "
+                f"no rung produced an answer (tried={tried})")
+        cert, name, obs, i = best      # best effort, flagged — never
+        ans = RoutedAnswer(            # silently passed off as certified
+            value=obs, kind="transient", rung=name, certified=cert,
+            tol=tol, escalations=i, tried=tried,
+            overhead_s=time.perf_counter() - t0 - answer_s,
+            certified_ok=False)
+        self.last_route = ans.route
+        return ans
 
     # -- ThermalSimulator protocol (full-order state convention) -------
     def zero_state(self, batch: Optional[int] = None) -> np.ndarray:

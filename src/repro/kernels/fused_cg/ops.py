@@ -32,6 +32,7 @@ CG solve (gradient work rides the dense tier).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
@@ -44,9 +45,10 @@ from ..coo_matvec.ops import _default_backend, _round_up
 from .kernel import LANE, SUBLANE, fused_cg_step_pallas
 
 __all__ = [
-    "CGStats", "FusedCGPlan", "fused_cg_plan", "fused_cg_solve",
-    "pcg_loop", "resolve_cg_impl", "warn_unconverged",
-    "unconverged_counts", "reset_unconverged_counts",
+    "CGStats", "FusedCGPlan", "all_finite", "fallback_counts",
+    "fused_cg_plan", "fused_cg_solve", "pcg_loop", "record_fallback",
+    "resolve_cg_impl", "warn_unconverged", "unconverged_counts",
+    "reset_unconverged_counts",
 ]
 
 _CG_IMPLS = ("auto", "fused", "unfused")
@@ -429,8 +431,18 @@ def pcg_loop(matvec: Callable, prec: Callable, rhs, x0, tol: float,
 # of identical RuntimeWarnings. Each site (the ``where`` string) warns
 # ONCE per process; every further hit only bumps its counter, which the
 # serving telemetry (``serving/telemetry.py``) surfaces in snapshots.
+# All of this state is shared across serving worker / supervisor /
+# client threads, so every touch goes through one lock — snapshot and
+# reset included (a torn read under concurrent solves would leak into
+# BENCH numbers).
+_SITE_LOCK = threading.Lock()
 _UNCONVERGED_COUNTS: dict = {}
 _WARNED_SITES: set = set()
+# Numerical-guardrail registry: every NaN/Inf detection that promoted a
+# solve to its dense/reference path records the site here (the
+# structured ``fallback`` record's process-wide counterpart; surfaced
+# by telemetry snapshots next to the unconverged counters).
+_FALLBACK_COUNTS: dict = {}
 
 
 def unconverged_counts() -> dict:
@@ -438,15 +450,42 @@ def unconverged_counts() -> dict:
     accumulated since process start (or the last reset). A "call" is one
     ``warn_unconverged`` invocation whose stats contain any
     iteration-cap hit — the rate-limited counterpart of the one-shot
-    warning."""
-    return dict(_UNCONVERGED_COUNTS)
+    warning. Thread-safe."""
+    with _SITE_LOCK:
+        return dict(_UNCONVERGED_COUNTS)
 
 
 def reset_unconverged_counts() -> None:
     """Clear the per-site counters AND re-arm the one-shot warnings
-    (tests of the warning path call this first)."""
-    _UNCONVERGED_COUNTS.clear()
-    _WARNED_SITES.clear()
+    (tests of the warning path call this first). Thread-safe; also
+    clears the numerical-fallback counters."""
+    with _SITE_LOCK:
+        _UNCONVERGED_COUNTS.clear()
+        _WARNED_SITES.clear()
+        _FALLBACK_COUNTS.clear()
+
+
+def record_fallback(site: str) -> None:
+    """Count one guardrail promotion (NaN/Inf solve output replaced by
+    the dense/reference path) at ``site``. Thread-safe."""
+    with _SITE_LOCK:
+        _FALLBACK_COUNTS[site] = _FALLBACK_COUNTS.get(site, 0) + 1
+
+
+def fallback_counts() -> dict:
+    """Snapshot of ``{site: guardrail promotions}`` since process start
+    (or the last :func:`reset_unconverged_counts`). Thread-safe."""
+    with _SITE_LOCK:
+        return dict(_FALLBACK_COUNTS)
+
+
+def all_finite(x) -> bool:
+    """Host-side NaN/Inf guard on a solve output. True for traced
+    values (convergence of a tracer is undecidable here — callers
+    guard at materialization boundaries instead)."""
+    if isinstance(x, jax.core.Tracer):
+        return True
+    return bool(np.isfinite(np.asarray(x)).all())
 
 
 def warn_unconverged(stats: Optional[CGStats], where: str) -> None:
@@ -464,10 +503,11 @@ def warn_unconverged(stats: Optional[CGStats], where: str) -> None:
     conv = np.asarray(stats.converged)
     if conv.all():
         return
-    _UNCONVERGED_COUNTS[where] = _UNCONVERGED_COUNTS.get(where, 0) + 1
-    if where in _WARNED_SITES:
-        return
-    _WARNED_SITES.add(where)
+    with _SITE_LOCK:
+        _UNCONVERGED_COUNTS[where] = _UNCONVERGED_COUNTS.get(where, 0) + 1
+        if where in _WARNED_SITES:
+            return
+        _WARNED_SITES.add(where)
     res = np.asarray(stats.residual)
     its = np.asarray(stats.iterations)
     bad = int(conv.size - conv.sum())

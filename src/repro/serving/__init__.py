@@ -2,26 +2,35 @@
 deadline-aware query service over the fidelity ladder.
 
 Layout:
-  oracle.py    — :class:`ThermalOracle`: the service (submit/query API,
-                 worker-side batch execution, warm(), x64 mode).
-  batcher.py   — :class:`ContinuousBatcher`: fixed-capacity slot-recycled
-                 batching loop (idiom donor: ``launch/serve.py``).
-  cache.py     — :class:`ModelCache`: content-addressed LRU model cache
-                 (keys from ``repro.core.fidelity.cache_key``).
-  telemetry.py — :class:`Telemetry`: per-request ring buffer + snapshots
-                 (the BENCH ``serving`` section's data source).
+  oracle.py     — :class:`ThermalOracle`: the service (submit/query API,
+                  worker-side batch execution, warm(), x64 mode).
+  batcher.py    — :class:`ContinuousBatcher`: fixed-capacity slot-recycled
+                  batching loop (idiom donor: ``launch/serve.py``).
+  supervisor.py — :class:`WorkerSupervisor`: worker-death watchdog
+                  (restart + bounded re-drive of in-flight requests).
+  cache.py      — :class:`ModelCache`: content-addressed LRU model cache
+                  (keys from ``repro.core.fidelity.cache_key``).
+  diskcache.py  — :class:`DiskCache`: crash-safe on-disk artifact tier
+                  (checksummed, atomic; persists the ROM basis across
+                  process restarts).
+  telemetry.py  — :class:`Telemetry`: per-request ring buffer + snapshots
+                  (the BENCH ``serving`` section's data source).
 """
 from .batcher import ContinuousBatcher
 from .cache import ModelCache, estimate_nbytes
+from .diskcache import DiskCache
 from .oracle import OracleResponse, PendingResult, ThermalOracle
+from .supervisor import WorkerSupervisor
 from .telemetry import Telemetry
 
 __all__ = [
     "ContinuousBatcher",
+    "DiskCache",
     "ModelCache",
     "OracleResponse",
     "PendingResult",
     "Telemetry",
     "ThermalOracle",
+    "WorkerSupervisor",
     "estimate_nbytes",
 ]

@@ -1,0 +1,160 @@
+"""Crash-safe on-disk artifact cache: persist expensive build products
+(the ROM Krylov basis above all) across process restarts.
+
+The warm :class:`~repro.serving.cache.ModelCache` amortizes builds
+within one process; the ROADMAP's open serving item is the *next*
+process — the ~98 s 8k-node ROM basis is recomputed from scratch every
+restart. :class:`DiskCache` closes that gap for the artifacts that
+dominate build time and pickle cleanly (dense f64 arrays), NOT for
+model objects themselves: symbolic networks, COO plans and jit caches
+rebuild in milliseconds and hold unpicklable state, so the oracle
+persists the basis and re-derives the rest (see
+``ThermalOracle._build``).
+
+Crash safety is the whole point, so every entry is:
+
+  * **content-addressed** — the filename is the sha256 of the cache key
+    (model content token + basis-relevant build opts), so concurrent
+    processes computing the same artifact converge on one file and a
+    *different* geometry/opts can never be served by accident;
+  * **checksummed** — the payload's sha256 is stored in the header and
+    verified on every read; torn writes, bit rot, or a deliberately
+    corrupted file fail the check and the entry is quarantined (renamed
+    ``*.corrupt``) and reported as a miss — the caller rebuilds and the
+    fresh ``put()`` replaces it. Never trust, always verify: a wrong
+    basis would produce silently-wrong temperatures;
+  * **atomically written** — payloads land in a same-directory temp
+    file first and are published with ``os.replace``; a crash mid-write
+    leaves either the old entry or a stray temp file, never a
+    half-written entry under the live name.
+
+``pickle`` is used for the payload (arrays + small tuples only); the
+checksum gate means a truncated or tampered pickle is rejected before
+``pickle.loads`` ever runs on it.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+from ..testing import faults
+
+_MAGIC = b"MFITDC1\n"                 # format tag + version
+
+
+def _digest(data: bytes) -> bytes:
+    return hashlib.sha256(data).digest()
+
+
+class DiskCache:
+    """Content-addressed, checksum-verified, atomically-written
+    key -> object store under one directory.
+
+    get(key)  -> object | None (miss, OR corruption: quarantined +
+                 counted, caller rebuilds).
+    put(key, obj) -> bytes written (atomic publish; losing a write race
+                 to an equivalent entry is harmless by content address).
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        os.makedirs(self.path, exist_ok=True)
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.corrupt = 0
+        self.writes = 0
+
+    # ------------------------------------------------------------------
+    def _file(self, key: str) -> str:
+        name = hashlib.sha256(key.encode()).hexdigest()[:40]
+        return os.path.join(self.path, f"{name}.mfit")
+
+    def get(self, key: str) -> Optional[Any]:
+        fname = self._file(key)
+        try:
+            with open(fname, "rb") as f:
+                blob = f.read()
+        except FileNotFoundError:
+            with self._lock:
+                self.misses += 1
+            return None
+        try:
+            faults.fire("diskcache.read")
+        except faults.FaultError:     # injected torn read: the checksum
+            blob = blob[:-1]          # gate must catch it downstream
+        obj, why = self._decode(blob)
+        if why is not None:           # corrupt: quarantine + rebuild
+            with self._lock:
+                self.corrupt += 1
+                self.misses += 1
+            try:
+                os.replace(fname, fname + ".corrupt")
+            except OSError:
+                pass
+            return None
+        with self._lock:
+            self.hits += 1
+        return obj
+
+    def put(self, key: str, obj: Any) -> int:
+        payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        blob = _MAGIC + _digest(payload) + payload
+        fname = self._file(key)
+        # same-directory temp file so os.replace stays one atomic
+        # rename on the same filesystem
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, fname)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        with self._lock:
+            self.writes += 1
+        return len(blob)
+
+    @staticmethod
+    def _decode(blob: bytes) -> Tuple[Optional[Any], Optional[str]]:
+        """-> (object, None) or (None, why_rejected)."""
+        if len(blob) < len(_MAGIC) + 32:
+            return None, "truncated header"
+        if not blob.startswith(_MAGIC):
+            return None, "bad magic"
+        check = blob[len(_MAGIC):len(_MAGIC) + 32]
+        payload = blob[len(_MAGIC) + 32:]
+        if _digest(payload) != check:
+            return None, "checksum mismatch"
+        try:
+            return pickle.loads(payload), None
+        except Exception as exc:      # checksum passed, pickle didn't:
+            return None, f"undecodable payload ({exc})"
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {"path": self.path, "hits": self.hits,
+                    "misses": self.misses, "corrupt": self.corrupt,
+                    "writes": self.writes}
+
+    def get_or_build(self, key: str, builder) -> Tuple[Any, bool, float]:
+        """-> (object, disk_hit, seconds) — builder() runs on miss and
+        its product is published for the next process."""
+        t0 = time.perf_counter()
+        obj = self.get(key)
+        if obj is not None:
+            return obj, True, time.perf_counter() - t0
+        obj = builder()
+        self.put(key, obj)
+        return obj, False, time.perf_counter() - t0

@@ -47,6 +47,26 @@ models, not one-shot ``build()`` scripts (cf. 3D-ICE 4.0's server mode).
     response carries its ``route`` (chosen rung, certified error bound,
     margin), which also lands as a telemetry route event.
 
+  * **Self-healing (PR-9).** A :class:`~repro.serving.supervisor
+    .WorkerSupervisor` watches the worker thread: a crash (bug, OOM, or
+    an injected ``serving.worker`` fault) restarts it after a jittered
+    backoff and re-drives the in-flight group ONCE — answers come back
+    ``status="retried"``; a request that kills the worker twice is
+    answered ``"failed"``, never hung. ``shutdown()`` drains every
+    queued future with terminal ``"shutdown"`` responses. Numerical
+    poison (NaN/Inf out of a rung's solver) is caught by the model-level
+    guardrails (``core/rom.py`` / ``core/dss.py``) which promote to a
+    reference path and attach the structured ``fallback`` record here;
+    on the ``"auto"`` rung, repeated solver failures open a per-rung
+    circuit breaker (``core/router.py``) and traffic degrades to the
+    next certified rung.
+
+  * **Disk tier.** ``disk=DiskCache(path)`` persists the expensive ROM
+    Krylov basis across PROCESS restarts (checksummed, atomically
+    written — ``serving/diskcache.py``): the next process warm-loads
+    the basis and rebuilds the cheap parts, closing the ROADMAP item on
+    amortizing the ~98 s 8k-node basis build.
+
 ``x64=True`` builds and executes every model under
 ``jax.experimental.enable_x64()`` *on the worker thread* (the flag is
 thread-local — a client-side context manager would not reach the
@@ -67,8 +87,11 @@ import numpy as np
 from ..core.dtpm import ThermalManager
 from ..core.fidelity import build, build_family
 from ..core.geometry import Package
+from ..testing import faults
 from .batcher import ContinuousBatcher
 from .cache import ModelCache
+from .diskcache import DiskCache
+from .supervisor import WorkerSupervisor
 from .telemetry import Telemetry
 
 _KINDS = ("steady", "transient", "dtpm", "family_steady",
@@ -80,15 +103,24 @@ class OracleResponse:
     """Structured outcome of one request (every path returns one).
 
     status: "ok" | "degraded" (answered, but a CG solve hit its
-            iteration cap — see ``cg``) | "timeout" (deadline passed
-            before dispatch) | "overflow" (queue full at submit) |
-            "error" (the solve raised; service stays live).
+            iteration cap — see ``cg``) | "retried" (answered, but only
+            after the worker died holding it and the supervisor
+            re-drove it on a restarted worker) | "timeout" (deadline
+            passed — before dispatch, or mid-batch while the solve ran)
+            | "overflow" (queue full at submit) | "error" (the solve
+            raised; service stays live) | "failed" (the request killed
+            the worker past its retry budget) | "shutdown" (the oracle
+            shut down before it could be dispatched).
     value:  temps — (n_obs,) steady, (T, n_obs) transient, (T,) max-temp
             trace for DTPM; None unless answered.
     route:  set when the answering model is the adaptive router
             (``fidelity="auto"``): chosen rung, certified error bound,
-            accuracy target, margin, escalation count (see
-            ``core/router.py``); None for hand-picked rungs.
+            accuracy target, margin, escalation count, ``certified_ok``
+            (see ``core/router.py``); None for hand-picked rungs.
+    fallback: set when the answering model's numerical guardrail fired
+            (non-finite solver output promoted to a reference path):
+            {"site", "to", "reason"} — an answer that took the slow
+            safe path SAYS so.
     """
     status: str
     value: Optional[np.ndarray] = None
@@ -101,10 +133,12 @@ class OracleResponse:
     cg: Optional[dict] = None
     info: Optional[dict] = None       # DTPM per-request telemetry
     route: Optional[dict] = None      # adaptive-router route event
+    retries: int = 0                  # supervisor re-drives it survived
+    fallback: Optional[dict] = None   # numerical-guardrail record
 
     @property
     def ok(self) -> bool:
-        return self.status in ("ok", "degraded")
+        return self.status in ("ok", "degraded", "retried")
 
 
 @dataclasses.dataclass
@@ -127,6 +161,7 @@ class PendingResult:
         self.deadline = deadline          # absolute time.monotonic()
         self.enq_t = time.monotonic()
         self.queue_depth = 0              # stamped by the batcher
+        self.retries = 0                  # supervisor re-drive count
         self._event = threading.Event()
         self._response: Optional[OracleResponse] = None
 
@@ -169,20 +204,31 @@ class ThermalOracle:
                  max_queue: int = 256, cache: Optional[ModelCache] = None,
                  telemetry: Optional[Telemetry] = None, x64: bool = False,
                  default_deadline_s: Optional[float] = None,
-                 build_opts: Optional[dict] = None, autostart: bool = True):
+                 build_opts: Optional[dict] = None, autostart: bool = True,
+                 supervise: bool = True,
+                 disk: Optional[DiskCache] = None):
         self.fidelity = fidelity
         self.capacity = int(capacity)
         self.x64 = bool(x64)
         self.default_deadline_s = default_deadline_s
         self.build_opts = dict(build_opts or {})
         self.cache = cache if cache is not None else ModelCache()
+        self.disk = disk
         self.telemetry = telemetry if telemetry is not None \
             else Telemetry(cache=self.cache)
         self._managers: Dict[tuple, ThermalManager] = {}
         self._managers_lock = threading.Lock()
+        self._shutting_down = False
         self._batcher = ContinuousBatcher(
             self._execute, self._expire, capacity=capacity,
             max_queue=max_queue)
+        self._supervisor = WorkerSupervisor(
+            self._batcher, on_fail=self._on_fail) if supervise else None
+        self.telemetry.register_stats(
+            "supervisor", lambda: self._supervisor.stats()
+            if self._supervisor else None)
+        self.telemetry.register_stats(
+            "disk", lambda: self.disk.stats() if self.disk else None)
         if autostart:
             self.start()
 
@@ -191,16 +237,27 @@ class ThermalOracle:
     # ------------------------------------------------------------------
     def start(self) -> "ThermalOracle":
         self._batcher.start()
+        if self._supervisor is not None:
+            self._supervisor.start()
         return self
 
-    def close(self) -> None:
+    def shutdown(self) -> None:
+        """Stop the service; every still-pending future is answered with
+        a terminal ``status="shutdown"`` response — clients blocked in
+        ``result()`` are released, never hung."""
+        self._shutting_down = True
+        if self._supervisor is not None:
+            self._supervisor.stop()
         self._batcher.stop()
+
+    def close(self) -> None:
+        self.shutdown()
 
     def __enter__(self) -> "ThermalOracle":
         return self.start()
 
     def __exit__(self, *exc) -> None:
-        self.close()
+        self.shutdown()
 
     # ------------------------------------------------------------------
     # model plumbing
@@ -212,12 +269,39 @@ class ThermalOracle:
         return self.cache.key_for(target, fidelity, opts,
                                   extra=("x64", self.x64))
 
+    #: build opts that shape the ROM Krylov basis — everything else
+    #: (ts, dtype, ...) reuses the same persisted basis.
+    _BASIS_OPTS = ("r", "n_moments", "solver", "cg_tol", "cg_maxiter")
+
     def _build(self, target, fidelity: str, opts: dict):
+        """Build a model; with a disk tier attached, ROM builds
+        warm-load the persisted Krylov basis (checksum-verified;
+        corruption -> rebuild) via ``build(..., basis=)`` and publish a
+        freshly built basis for the NEXT process. Everything cheap
+        (network assembly, projection, jit) always rebuilds live —
+        only the build-time-dominant artifact is persisted."""
         fn = build if isinstance(target, Package) else build_family
+        persist_key = None
+        if self.disk is not None and fidelity == "rom" \
+                and "basis" not in opts:
+            basis_key = self.cache.key_for(
+                target, "rom_basis",
+                {k: opts[k] for k in self._BASIS_OPTS if k in opts},
+                extra=("x64", self.x64))
+            basis = self.disk.get(basis_key)
+            if basis is not None:
+                opts = {**opts, "basis": np.asarray(basis, np.float64)}
+            else:
+                persist_key = basis_key
         if self.x64:
             with jax.experimental.enable_x64():
-                return fn(target, fidelity, **opts)
-        return fn(target, fidelity, **opts)
+                model = fn(target, fidelity, **opts)
+        else:
+            model = fn(target, fidelity, **opts)
+        if persist_key is not None and getattr(model, "V", None) \
+                is not None:
+            self.disk.put(persist_key, np.asarray(model.V, np.float64))
+        return model
 
     def _model(self, req: _Request) -> Tuple[object, bool, float]:
         return self.cache.get_or_build(
@@ -248,15 +332,35 @@ class ThermalOracle:
     # ------------------------------------------------------------------
     # submission API (any thread)
     # ------------------------------------------------------------------
+    @staticmethod
+    def _check_payload(payload: dict) -> None:
+        """Reject non-finite request arrays at SUBMIT time, naming the
+        offending field — poison must not reach the shared batch (one
+        NaN row would contaminate its whole compiled group)."""
+        for name, arr in payload.items():
+            if isinstance(arr, np.ndarray) \
+                    and not np.isfinite(arr).all():
+                raise ValueError(
+                    f"request array {name!r} contains non-finite "
+                    f"values (NaN/Inf); refusing to enqueue")
+
     def _submit(self, req: _Request,
                 deadline_s: Optional[float]) -> PendingResult:
+        self._check_payload(req.payload)
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         deadline = None if deadline_s is None \
             else time.monotonic() + deadline_s
         pending = PendingResult(req, deadline)
         self.telemetry.note_submit()
-        if not self._batcher.submit(pending):
+        accepted = self._batcher.submit(pending)
+        if accepted is None:           # stopping: terminal, never hangs
+            pending.fulfill(OracleResponse(
+                status="shutdown",
+                detail="oracle is shut down; request rejected at submit"))
+            self.telemetry.record(kind=req.kind, status="shutdown",
+                                  latency_s=0.0, queue_depth=0)
+        elif accepted is False:
             resp = OracleResponse(
                 status="overflow",
                 detail=f"queue full ({self._batcher.max_queue}); request "
@@ -366,16 +470,43 @@ class ThermalOracle:
     # worker-side execution (single thread; jit caches stay single-owner)
     # ------------------------------------------------------------------
     def _expire(self, pending: PendingResult) -> None:
+        if pending.done():             # already answered (e.g. failed
+            return                     # by the supervisor) — keep it
         now = time.monotonic()
-        resp = OracleResponse(
-            status="timeout", latency_s=now - pending.enq_t,
-            queue_s=now - pending.enq_t,
-            detail="deadline passed before dispatch (queue wait "
-                   f"{now - pending.enq_t:.3f}s)")
+        if self._shutting_down:        # stop() drains the queue here
+            resp = OracleResponse(
+                status="shutdown", latency_s=now - pending.enq_t,
+                queue_s=now - pending.enq_t,
+                detail="oracle shut down before the request was "
+                       "dispatched")
+        else:
+            resp = OracleResponse(
+                status="timeout", latency_s=now - pending.enq_t,
+                queue_s=now - pending.enq_t,
+                detail="deadline passed before dispatch (queue wait "
+                       f"{now - pending.enq_t:.3f}s)")
         pending.fulfill(resp)
-        self.telemetry.record(kind=pending.req.kind, status="timeout",
+        self.telemetry.record(kind=pending.req.kind, status=resp.status,
                               latency_s=resp.latency_s,
                               queue_s=resp.queue_s,
+                              queue_depth=pending.queue_depth)
+
+    def _on_fail(self, pending: PendingResult,
+                 exc: BaseException) -> None:
+        """Supervisor callback: the request killed the worker past its
+        retry budget — terminal structured failure, never a hang."""
+        if pending.done():
+            return
+        now = time.monotonic()
+        resp = OracleResponse(
+            status="failed", latency_s=now - pending.enq_t,
+            retries=pending.retries,
+            detail=f"worker crashed while executing this request "
+                   f"({type(exc).__name__}: {exc}); retry budget "
+                   f"exhausted after {pending.retries} re-drive(s)")
+        pending.fulfill(resp)
+        self.telemetry.record(kind=pending.req.kind, status="failed",
+                              latency_s=resp.latency_s,
                               queue_depth=pending.queue_depth)
 
     def _execute(self, group_key: tuple, group) -> None:
@@ -415,19 +546,24 @@ class ThermalOracle:
                 "converged": bool(conv.all())}
 
     def _answer(self, group) -> None:
-        req0 = group[0].req
+        faults.fire("serving.answer")   # chaos hook: batcher-side
+        req0 = group[0].req             # exceptions / stalls mid-batch
         start = time.monotonic()
         model, hit, build_s = self._model(req0)
         kind = req0.kind
         slot_routes: Optional[list] = None
+        slot_fallbacks: Optional[list] = None
         if kind == "steady":
-            # per-slot solves: capture the router's route per slot (a
-            # hand-picked rung has no last_route -> None, no event)
-            values, slot_routes = [], []
+            # per-slot solves: capture the router's route AND any
+            # numerical-guardrail fallback per slot (a hand-picked rung
+            # has no last_route -> None, no event)
+            values, slot_routes, slot_fallbacks = [], [], []
             for p in group:
                 values.append(np.asarray(model.observe(
                     model.steady_state(p.req.payload["q"]))))
                 slot_routes.append(getattr(model, "last_route", None))
+                slot_fallbacks.append(
+                    getattr(model, "last_fallback", None))
         elif kind == "transient":
             values = self._answer_transient(model, group)
         elif kind == "dtpm":
@@ -440,6 +576,9 @@ class ThermalOracle:
             raise ValueError(f"unknown request kind {kind!r}")
         if slot_routes is None:
             slot_routes = self._routes_of(model, kind, len(group))
+        if slot_fallbacks is None:     # batched kinds fall back (or
+            slot_fallbacks = [getattr(model, "last_fallback", None)
+                              ] * len(group)    # not) as one batch
         cg = self._cg_summary(model)
         degraded = cg is not None and not cg["converged"]
         done = time.monotonic()
@@ -449,20 +588,39 @@ class ThermalOracle:
             if isinstance(value, tuple):   # dtpm: (trace, telemetry)
                 value, info = value
             route = slot_routes[i] if i < len(slot_routes) else None
+            fallback = slot_fallbacks[i] \
+                if i < len(slot_fallbacks) else None
+            if degraded:
+                status = "degraded"
+                detail = ("CG hit its iteration cap — results may be "
+                          "unconverged (see cg)")
+            elif p.deadline is not None and done > p.deadline:
+                # the solve outlived the request's deadline mid-batch:
+                # honest timeout, value still attached for best-effort
+                # consumers
+                status = "timeout"
+                detail = (f"deadline passed mid-batch (answered "
+                          f"{done - p.deadline:.3f}s late; value "
+                          f"attached best-effort)")
+            elif p.retries > 0:
+                status = "retried"
+                detail = (f"answered after {p.retries} worker "
+                          f"restart(s) — see telemetry 'supervisor'")
+            else:
+                status, detail = "ok", ""
             resp = OracleResponse(
-                status="degraded" if degraded else "ok", value=value,
-                detail="CG hit its iteration cap — results may be "
-                       "unconverged (see cg)" if degraded else "",
+                status=status, value=value, detail=detail,
                 latency_s=done - p.enq_t, queue_s=start - p.enq_t,
                 cache_hit=hit, occupancy=occupancy, cg=cg, info=info,
-                route=route)
+                route=route, retries=p.retries, fallback=fallback)
             p.fulfill(resp)
             self.telemetry.record(
                 kind=kind, status=resp.status, latency_s=resp.latency_s,
                 queue_s=resp.queue_s, queue_depth=p.queue_depth,
                 occupancy=occupancy, cache_hit=hit, cg=cg,
                 build_s=build_s,
-                **({"route": route} if route else {}))
+                **({"route": route} if route else {}),
+                **({"fallback": fallback} if fallback else {}))
 
     @staticmethod
     def _routes_of(model, kind: str, n_slots: int) -> list:

@@ -1,0 +1,118 @@
+"""Worker supervision: the self-healing loop over the oracle's single
+batcher thread.
+
+The continuous batcher runs ONE worker thread; anything that escapes the
+execute callback — a genuine bug, an OOM-killed jit, an injected
+``serving.worker`` fault — kills it, and without supervision every
+queued and in-flight future would hang until its client-side timeout.
+:class:`WorkerSupervisor` closes that hole:
+
+  * a poll loop watches ``batcher.crashed`` (set by the dying thread's
+    wrapper — worker death is *recorded*, never re-raised into the
+    interpreter's threading excepthook);
+  * on death it claims the in-flight group (``take_inflight``), splits
+    it by retry budget — each request is re-driven at most ONCE, so a
+    poison request that reliably kills the worker fails structurally on
+    its second pass instead of crash-looping the service forever;
+  * requests past their budget are answered through the oracle's
+    ``on_fail`` callback (status ``"failed"``, the crash in ``detail``);
+  * the rest are stamped ``retries += 1``, the worker is restarted after
+    one seeded, jittered backoff (deterministic under a fixed seed —
+    the chaos soak replays schedules exactly), and the survivors are
+    requeued at the HEAD of the queue: they already waited their turn.
+
+The supervisor never touches responses itself — fulfilment stays with
+the oracle's callbacks so every answer keeps flowing through one
+telemetry path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from .batcher import ContinuousBatcher
+
+
+class WorkerSupervisor:
+    """Watchdog for a :class:`ContinuousBatcher`'s worker thread.
+
+    on_fail(pending, exc): answer a request whose retry budget is spent
+        (runs on the supervisor thread; must fulfill the pending).
+    poll_s:    crash-detection latency (the watchdog's sampling period).
+    backoff_s: base restart delay; the actual delay is uniformly
+               jittered in [0.5, 1.5) * backoff_s from a seeded RNG.
+    max_retries: re-drives per request before ``on_fail`` (default 1).
+    """
+
+    def __init__(self, batcher: ContinuousBatcher,
+                 on_fail: Callable, poll_s: float = 0.05,
+                 backoff_s: float = 0.1, seed: int = 0,
+                 max_retries: int = 1):
+        self.batcher = batcher
+        self.on_fail = on_fail
+        self.poll_s = float(poll_s)
+        self.backoff_s = float(backoff_s)
+        self.max_retries = int(max_retries)
+        self._rng = np.random.default_rng(seed)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.restarts = 0
+        self.retried = 0
+        self.failed = 0
+        self.last_error: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> "WorkerSupervisor":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._loop,
+                                            name="thermal-supervisor",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"restarts": self.restarts, "retried": self.retried,
+                    "failed": self.failed, "last_error": self.last_error}
+
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            if self.batcher.crashed is not None \
+                    and not self.batcher.stopping:
+                self._heal(self.batcher.crashed)
+
+    def _heal(self, exc: BaseException) -> None:
+        inflight = [p for p in self.batcher.take_inflight()
+                    if not p.done()]
+        redrive, spent = [], []
+        for p in inflight:
+            (spent if p.retries >= self.max_retries
+             else redrive).append(p)
+        for p in spent:                 # budget gone: structured failure
+            self.on_fail(p, exc)
+        for p in redrive:
+            p.retries += 1
+        # jittered backoff before respawning: a crash storm must not
+        # busy-spin restarts (seeded — chaos runs replay exactly)
+        time.sleep(self.backoff_s * (0.5 + self._rng.random()))
+        with self._lock:
+            self.restarts += 1
+            self.retried += len(redrive)
+            self.failed += len(spent)
+            self.last_error = f"{type(exc).__name__}: {exc}"
+        if self.batcher.stopping:       # shut down during the backoff:
+            return                      # stop() drains what's queued
+        self.batcher.start()            # clears .crashed
+        if redrive:
+            self.batcher.requeue_front(redrive)

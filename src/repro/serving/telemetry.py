@@ -1,8 +1,8 @@
 """Serving telemetry: a lock-guarded ring buffer of per-request events
 plus structured snapshots.
 
-Every completed request (ok / degraded / timeout / overflow / error)
-lands one event dict in a bounded ring (``collections.deque(maxlen=)``)
+Every completed request (ok / degraded / retried / timeout / overflow /
+error / failed / shutdown) lands one event dict in a bounded ring (``collections.deque(maxlen=)``)
 recording end-to-end latency, queue wait, queue depth at enqueue, the
 batch occupancy it rode in (live slots / capacity), whether its model
 came out of the warm cache, and — when the answering solver was the CG
@@ -61,6 +61,15 @@ class Telemetry:
         self.cache = cache            # ModelCache whose stats() to embed
         self.counts: Dict[str, int] = {}   # by status
         self.submitted = 0
+        self._stats_fns: Dict[str, object] = {}
+
+    def register_stats(self, name: str, fn) -> None:
+        """Attach a named stats provider (e.g. the oracle's supervisor
+        or disk cache): ``fn()`` is called at snapshot time and its
+        dict lands under ``snapshot()[name]``; a provider returning
+        None is omitted (the subsystem isn't attached)."""
+        with self._lock:
+            self._stats_fns[name] = fn
 
     # ------------------------------------------------------------------
     def note_submit(self) -> None:
@@ -85,23 +94,30 @@ class Telemetry:
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
         """Structured reduction of the ring (the BENCH-consumed shape)."""
-        from ..kernels.fused_cg.ops import unconverged_counts
+        from ..kernels.fused_cg.ops import fallback_counts, \
+            unconverged_counts
         with self._lock:
             events = list(self._ring)
             counts = dict(self.counts)
             submitted = self.submitted
+            stats_fns = dict(self._stats_fns)
         by_kind: Dict[str, List[float]] = {}
         depths, occs = [], []
         routed: List[dict] = []
+        fallbacks: Dict[str, int] = {}
         answered = 0
         for e in events:
-            if e["status"] in ("ok", "degraded"):
+            if e["status"] in ("ok", "degraded", "retried"):
                 by_kind.setdefault(e["kind"], []).append(e["latency_s"])
                 depths.append(e["queue_depth"])
                 occs.append(e["occupancy"])
                 answered += 1
             if e.get("route"):
                 routed.append(e["route"])
+            fb = e.get("fallback")
+            if fb:
+                fallbacks[fb.get("site", "?")] = \
+                    fallbacks.get(fb.get("site", "?"), 0) + 1
         latency = {
             kind: {"p50_s": _percentile(vals, 50),
                    "p99_s": _percentile(vals, 99),
@@ -121,11 +137,18 @@ class Telemetry:
             else float("nan"),
             "ring_events": len(events),
             "cg_unconverged_sites": unconverged_counts(),
+            "solver_fallbacks": fallback_counts(),
         }
+        if fallbacks:
+            snap["request_fallbacks"] = fallbacks
         if routed:
             snap["router"] = self._reduce_routes(routed)
         if self.cache is not None:
             snap["cache"] = self.cache.stats()
+        for name, fn in sorted(stats_fns.items()):
+            sub = fn()
+            if sub is not None:
+                snap[name] = sub
         return snap
 
     @staticmethod
@@ -135,16 +158,37 @@ class Telemetry:
         tightest certificate margin (tol - certified; negative would
         mean an accepted answer outside its accuracy target)."""
         by_rung: Dict[str, int] = {}
+        rung_failures: Dict[str, int] = {}
+        breaker_skips: Dict[str, int] = {}
         margins = []
         escalations = 0
+        breaker_trips = 0
+        uncertified = 0
         for r in routed:
             by_rung[r["rung"]] = by_rung.get(r["rung"], 0) + 1
             escalations += int(r.get("escalations", 0))
             if r.get("margin") is not None:
                 margins.append(float(r["margin"]))
-        return {"n_routed": len(routed), "by_rung": by_rung,
-                "escalations": escalations,
-                "min_margin": min(margins) if margins else None,
-                "worst_certified": max(
-                    (float(r["certified"]) for r in routed
-                     if r.get("certified") is not None), default=None)}
+            if r.get("certified_ok") is False:
+                uncertified += 1
+            for t in r.get("tried") or []:
+                rung = t.get("rung", "?")
+                if "error" in t:
+                    rung_failures[rung] = rung_failures.get(rung, 0) + 1
+                if t.get("breaker_tripped"):
+                    breaker_trips += 1
+                if t.get("breaker") == "open":
+                    breaker_skips[rung] = breaker_skips.get(rung, 0) + 1
+        out = {"n_routed": len(routed), "by_rung": by_rung,
+               "escalations": escalations,
+               "min_margin": min(margins) if margins else None,
+               "worst_certified": max(
+                   (float(r["certified"]) for r in routed
+                    if r.get("certified") is not None), default=None)}
+        if rung_failures or breaker_trips or breaker_skips:
+            out["rung_failures"] = rung_failures
+            out["breaker_trips"] = breaker_trips
+            out["breaker_skips"] = breaker_skips
+        if uncertified:
+            out["uncertified_answers"] = uncertified
+        return out

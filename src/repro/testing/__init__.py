@@ -1,0 +1,10 @@
+"""Deterministic test instrumentation for the serving/solver stack.
+
+``repro.testing.faults`` is the seeded fault-injection framework the
+chaos tests and ``scripts/chaos_soak.py`` drive; production modules
+carry zero-cost hook calls (``faults.fire`` / ``faults.corrupt``) that
+are inert until a plan is installed.
+"""
+from . import faults  # noqa: F401
+
+__all__ = ["faults"]

@@ -1,0 +1,199 @@
+"""Deterministic, seeded fault injection for the serving + solver stack.
+
+The resilience contract of the thermal oracle — every fault yields a
+structured :class:`~repro.serving.oracle.OracleResponse`, never a hang,
+never silent garbage — is only testable if the faults themselves are
+reproducible. This module is the single switchboard: production code
+carries named *sites* (``faults.fire("serving.worker")``,
+``x = faults.corrupt("rom.steady", x)``) that are free when no plan is
+installed (one module-global ``is None`` check) and deterministic when
+one is.
+
+Sites threaded through the stack (the chaos tests and
+``scripts/chaos_soak.py`` drive these):
+
+  ====================  ===================================================
+  site                  where / what it simulates
+  ====================  ===================================================
+  serving.worker        batcher worker thread crashes with a batch in
+                        flight (``serving/batcher.py``; the supervisor's
+                        restart + re-drive path)
+  serving.answer        exception or stall mid-batch inside the oracle's
+                        answer path (``serving/oracle.py``)
+  rom.steady            NaN/Inf poison on the ROM reduced steady solve
+                        output (``core/rom.py`` guardrail -> dense
+                        full-order fallback)
+  rom.transient         poison on the ROM batched rollout observations
+                        (guardrail -> host-f64 reference rollout)
+  rom.basis_solve       poison on the block-CG basis solves
+                        (``_make_neg_g_solver`` -> dense re-solve)
+  dss.steady            poison on the DSS cg-tier steady solve
+                        (``core/dss.py`` -> dense ZOH fixed point)
+  dss.transient         poison on the DSS rollout observations
+                        (-> host-f64 ``EighZOH``-class reference rollout)
+  router.steady.<rung>  rung solver failure inside the certified ladder
+  router.transient.<rung>  (``core/router.py``; feeds the circuit
+                        breakers — repeated failures open the breaker)
+  diskcache.read        torn/corrupted on-disk cache entry
+                        (``serving/diskcache.py`` checksum rejection)
+  ====================  ===================================================
+
+Determinism: each site draws from its own ``np.random.default_rng``
+seeded by ``(plan seed, site name)``, so one site's decision sequence
+does not depend on call interleaving at other sites (thread schedules
+permute sites, not a site's own sequence). ``times=`` caps are counted
+under a lock.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+import zlib
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "FaultError", "FaultSpec", "FaultPlan", "install", "clear",
+    "active", "fire", "corrupt", "fired_counts", "injected",
+]
+
+#: modes a spec can take at a site
+_MODES = ("raise", "nan", "inf", "delay")
+
+
+class FaultError(RuntimeError):
+    """An injected fault (distinguishable from organic failures)."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """What happens when an armed site is hit.
+
+    mode:    "raise" (throw :class:`FaultError`), "nan"/"inf" (poison
+             the array passed through :func:`corrupt`), "delay" (sleep
+             ``delay_s`` then proceed — deadline storms / stalls).
+    p:       per-hit firing probability (site-seeded, deterministic).
+    times:   total fire budget (None = unlimited).
+    delay_s: stall duration for mode="delay" (also honored before a
+             "raise"/"nan" fire when > 0).
+    """
+    mode: str
+    p: float = 1.0
+    times: Optional[int] = None
+    delay_s: float = 0.0
+    message: str = "injected fault"
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+
+
+class FaultPlan:
+    """A seeded schedule of per-site :class:`FaultSpec`\\ s."""
+
+    def __init__(self, seed: int = 0,
+                 specs: Optional[Dict[str, FaultSpec]] = None):
+        self.seed = int(seed)
+        self.specs: Dict[str, FaultSpec] = dict(specs or {})
+        self.fired: Dict[str, int] = {}
+        self._rngs: Dict[str, np.random.Generator] = {}
+        self._lock = threading.Lock()
+
+    def arm(self, site: str, spec: FaultSpec) -> "FaultPlan":
+        with self._lock:
+            self.specs[site] = spec
+        return self
+
+    def decide(self, site: str) -> Optional[FaultSpec]:
+        """The armed spec if this hit fires, else None (thread-safe;
+        per-site deterministic given the plan seed)."""
+        spec = self.specs.get(site)
+        if spec is None:
+            return None
+        with self._lock:
+            if spec.times is not None \
+                    and self.fired.get(site, 0) >= spec.times:
+                return None
+            rng = self._rngs.get(site)
+            if rng is None:
+                rng = self._rngs[site] = np.random.default_rng(
+                    [self.seed, zlib.crc32(site.encode())])
+            if spec.p < 1.0 and rng.random() >= spec.p:
+                return None
+            self.fired[site] = self.fired.get(site, 0) + 1
+        return spec
+
+
+# one plan per process; installed/cleared around a test or soak phase
+_PLAN: Optional[FaultPlan] = None
+
+
+def install(plan: FaultPlan) -> FaultPlan:
+    global _PLAN
+    _PLAN = plan
+    return plan
+
+
+def clear() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+def fired_counts() -> Dict[str, int]:
+    """``{site: fires}`` of the installed plan ({} when none)."""
+    plan = _PLAN
+    return dict(plan.fired) if plan is not None else {}
+
+
+@contextlib.contextmanager
+def injected(specs: Dict[str, FaultSpec], seed: int = 0):
+    """Install a plan for the block, always clearing on exit."""
+    plan = install(FaultPlan(seed=seed, specs=specs))
+    try:
+        yield plan
+    finally:
+        clear()
+
+
+# ---------------------------------------------------------------------------
+# the two production hooks
+# ---------------------------------------------------------------------------
+def fire(site: str) -> None:
+    """Raise/stall at ``site`` if armed; free no-op otherwise."""
+    plan = _PLAN
+    if plan is None:
+        return
+    spec = plan.decide(site)
+    if spec is None:
+        return
+    if spec.delay_s > 0.0:
+        time.sleep(spec.delay_s)
+    if spec.mode == "raise":
+        raise FaultError(f"{site}: {spec.message}")
+
+
+def corrupt(site: str, arr):
+    """Return ``arr`` poisoned with NaN/Inf if ``site`` is armed with a
+    "nan"/"inf" spec; the original array otherwise. Host numpy only —
+    call at materialization boundaries, never under jit."""
+    plan = _PLAN
+    if plan is None:
+        return arr
+    spec = plan.decide(site)
+    if spec is None or spec.mode not in ("nan", "inf"):
+        return arr
+    if spec.delay_s > 0.0:
+        time.sleep(spec.delay_s)
+    out = np.array(arr, np.float64, copy=True)
+    # .flat assigns through whatever memory order the copy kept —
+    # reshape(-1) on an F-ordered array would poison a throwaway copy
+    out.flat[0] = np.nan if spec.mode == "nan" else np.inf
+    return out

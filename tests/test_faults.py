@@ -1,0 +1,329 @@
+"""Fault-injection chaos layer + self-healing serving (PR 9).
+
+Contract under test: every injected fault class — worker-thread death,
+mid-batch exceptions and stalls, NaN/Inf solver poison, rung failures
+inside the certified router — yields a STRUCTURED response or a
+reference-path answer that says it took the fallback. Never a hang,
+never a crash, never silent garbage: guardrail fallbacks must match the
+healthy answer (the injection poisons the fast path, the promoted
+reference path recomputes honestly).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fidelity import build
+from repro.core.geometry import make_2p5d_package
+from repro.kernels.fused_cg import ops
+from repro.serving import ThermalOracle
+from repro.testing import faults
+
+ROM_OPTS = {"n_moments": 2, "ts": 0.01}
+DT = 0.01
+
+
+def _pkg():
+    return make_2p5d_package(4)
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan():
+    faults.clear()
+    ops.reset_unconverged_counts()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# the framework itself
+# ---------------------------------------------------------------------------
+def test_plan_is_deterministic_and_site_isolated():
+    # a site's own fire/skip sequence depends only on (seed, site) —
+    # interleaving hits at OTHER sites must not perturb it
+    def seq(interleave):
+        plan = faults.FaultPlan(seed=7, specs={
+            "a": faults.FaultSpec(mode="raise", p=0.5),
+            "b": faults.FaultSpec(mode="raise", p=0.5)})
+        out = []
+        for _ in range(32):
+            if interleave:
+                plan.decide("b")
+            out.append(plan.decide("a") is not None)
+        return out
+    assert seq(False) == seq(True)
+    assert any(seq(False)) and not all(seq(False))   # p=0.5 really mixes
+
+
+def test_times_budget_and_fired_counts():
+    with faults.injected({"x": faults.FaultSpec(mode="raise", times=2)}):
+        for _ in range(2):
+            with pytest.raises(faults.FaultError):
+                faults.fire("x")
+        faults.fire("x")                 # budget spent: no-op
+        assert faults.fired_counts() == {"x": 2}
+    faults.fire("x")                     # cleared: no-op
+    assert faults.fired_counts() == {}
+
+
+def test_corrupt_passes_through_unarmed_and_poisons_armed():
+    a = np.ones(4)
+    assert faults.corrupt("y", a) is a   # no plan: zero-cost identity
+    with faults.injected({"y": faults.FaultSpec(mode="inf")}):
+        out = faults.corrupt("y", a)
+        assert np.isinf(out).any() and np.isfinite(a).all()
+
+
+# ---------------------------------------------------------------------------
+# numerical guardrails: poison -> reference path, answers stay right
+# ---------------------------------------------------------------------------
+def test_rom_steady_guardrail_matches_healthy_answer():
+    model = build(_pkg(), "rom", **ROM_OPTS)
+    q = np.full(4, 3.0)
+    healthy = model.observe(model.steady_state(q))
+    with faults.injected({"rom.steady": faults.FaultSpec(mode="nan",
+                                                         times=1)}):
+        obs = model.observe(model.steady_state(q))
+        assert model.last_fallback["site"] == "rom.steady"
+    np.testing.assert_allclose(obs, healthy, atol=1e-8)
+    assert ops.fallback_counts()["rom.steady"] == 1
+    # next solve is healthy again and clears the record
+    model.steady_state(q)
+    assert model.last_fallback is None
+
+
+def test_rom_transient_guardrail_matches_healthy_rollout():
+    model = build(_pkg(), "rom", **ROM_OPTS)
+    q = np.full((20, 2, 4), 2.0)
+    th0 = model.zero_state(batch=2)
+    healthy = np.asarray(model.simulate_batch(th0, q, DT))
+    with faults.injected({"rom.transient": faults.FaultSpec(mode="inf",
+                                                            times=1)}):
+        obs = np.asarray(model.simulate_batch(th0, q, DT))
+        assert model.last_fallback["site"] == "rom.transient"
+    # host-f64 exact-ZOH reference vs the f32 jit rollout
+    np.testing.assert_allclose(obs, healthy, atol=1e-3)
+    assert np.isfinite(obs).all()
+
+
+def test_dss_guardrails_match_healthy_answers():
+    model = build(_pkg(), "dss", ts=DT, solver="cg")
+    q = np.full(4, 3.0)
+    healthy = model.observe(model.steady_state(q))
+    with faults.injected({"dss.steady": faults.FaultSpec(mode="nan",
+                                                         times=1)}):
+        obs = model.observe(model.steady_state(q))
+        assert model.last_fallback["site"] == "dss.steady"
+    np.testing.assert_allclose(obs, healthy, atol=1e-5)
+
+    q_traj = np.full((20, 4), 2.0)
+    sim = model.make_simulator(DT)
+    healthy_t = np.asarray(sim(model.zero_state(), q_traj))
+    with faults.injected({"dss.transient": faults.FaultSpec(mode="inf",
+                                                            times=1)}):
+        obs_t = np.asarray(sim(model.zero_state(), q_traj))
+        assert model.last_fallback["site"] == "dss.transient"
+    np.testing.assert_allclose(obs_t, healthy_t, atol=1e-3)
+
+
+def test_rom_basis_solve_poison_promotes_to_dense_and_basis_is_sane():
+    # corrupt the block-CG basis solves: the builder must re-solve each
+    # poisoned block densely and still deliver a working C-orthonormal
+    # basis (the resulting ROM answers like an unpoisoned one)
+    healthy = build(_pkg(), "rom", solver="cg", **ROM_OPTS)
+    q = np.full(4, 3.0)
+    ref = healthy.observe(healthy.steady_state(q))
+    with faults.injected({"rom.basis_solve":
+                          faults.FaultSpec(mode="nan")}):
+        model = build(_pkg(), "rom", solver="cg", **ROM_OPTS)
+    assert ops.fallback_counts()["rom.basis_solve"] >= 1
+    obs = model.observe(model.steady_state(q))
+    np.testing.assert_allclose(obs, ref, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# router: breakers + degradation (unit level; serving level below)
+# ---------------------------------------------------------------------------
+def test_router_rung_failure_falls_back_and_breaker_opens():
+    r = build(_pkg(), "auto", tol=1e-2, rom_opts={"n_moments": 2},
+              breaker_threshold=3, breaker_cooldown_s=0.2)
+    q = np.full(4, 3.0)
+    ref = r.query_steady(q, rung="rc").value
+    with faults.injected({"router.steady.rom":
+                          faults.FaultSpec(mode="raise")}):
+        for _ in range(3):
+            a = r.query_steady(q)
+            assert a.rung == "rc" and a.certified_ok
+            assert any("error" in t for t in a.tried)
+            np.testing.assert_allclose(a.value, ref, atol=1e-9)
+        assert r.breaker_states()["rom"]["trips"] == 1
+        # breaker open: rom is skipped without paying the failing solve
+        a = r.query_steady(q)
+        assert {"rung": "rom", "breaker": "open"} in a.tried
+    # cooldown elapses, the plan is gone: half-open probe heals the rung
+    time.sleep(0.25)
+    a = r.query_steady(q)
+    assert a.rung == "rom"
+    assert r.breaker_states()["rom"]["state"] == "closed"
+
+
+def test_router_exhaustion_returns_flagged_best_effort():
+    r = build(_pkg(), "auto", tol=1e-2, rom_opts={"n_moments": 2})
+    a = r.query_steady(np.full(4, 3.0), tol=1e-30)  # below every floor
+    assert a.certified_ok is False                  # flagged, not silent
+    assert a.certified is not None and a.certified > 1e-30
+    assert a.route["certified_ok"] is False
+    assert np.isfinite(a.value).all()
+
+
+def test_router_all_rungs_failing_raises_structured():
+    r = build(_pkg(), "auto", tol=1e-2, rom_opts={"n_moments": 2})
+    with faults.injected({
+            "router.steady.rom": faults.FaultSpec(mode="raise"),
+            "router.steady.rc": faults.FaultSpec(mode="raise")}):
+        with pytest.raises(RuntimeError, match="routing exhausted"):
+            r.query_steady(np.full(4, 3.0))
+
+
+# ---------------------------------------------------------------------------
+# serving: supervised worker + chaos at the oracle level
+# ---------------------------------------------------------------------------
+def test_worker_crash_is_retried_once_and_answered():
+    with faults.injected({"serving.worker":
+                          faults.FaultSpec(mode="raise", times=1)}):
+        with ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS) as oracle:
+            r = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert r.status == "retried" and r.ok and r.retries == 1
+            assert "restart" in r.detail
+            sup = oracle.telemetry.snapshot()["supervisor"]
+            assert sup["restarts"] == 1 and sup["retried"] == 1
+            # parity: the re-driven answer equals the direct solve
+            model = build(_pkg(), "rom", **ROM_OPTS)
+            ref = model.observe(model.steady_state(np.full(4, 3.0)))
+            np.testing.assert_allclose(r.value, ref, atol=1e-6)
+
+
+def test_poison_request_fails_structurally_not_crash_loop():
+    # a request that reliably kills the worker must be answered "failed"
+    # after ONE re-drive — and the service must stay live for the next
+    # (healthy) request
+    with faults.injected({"serving.worker":
+                          faults.FaultSpec(mode="raise", times=2)}):
+        with ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS) as oracle:
+            r = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert r.status == "failed" and not r.ok
+            assert "retry budget" in r.detail
+            live = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert live.status == "ok"
+            sup = oracle.telemetry.snapshot()["supervisor"]
+            assert sup["failed"] == 1 and sup["restarts"] == 2
+
+
+def test_midbatch_exception_is_structured_error():
+    with faults.injected({"serving.answer":
+                          faults.FaultSpec(mode="raise", times=1)}):
+        with ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS) as oracle:
+            r = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert r.status == "error" and "injected fault" in r.detail
+            assert oracle.query_steady(_pkg(),
+                                       np.full(4, 3.0)).status == "ok"
+
+
+def test_deadline_expiry_midbatch_is_honest_timeout():
+    # the stall hits AFTER dispatch (inside _answer), so the deadline
+    # passes mid-batch: the response must say timeout, not "ok"
+    with faults.injected({"serving.answer":
+                          faults.FaultSpec(mode="delay", delay_s=0.3,
+                                           times=1)}):
+        with ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS) as oracle:
+            oracle.warm(_pkg())        # exclude build time from the race
+            r = oracle.submit_steady(_pkg(), np.full(4, 3.0),
+                                     deadline_s=0.1).result(timeout=60)
+            assert r.status == "timeout" and "mid-batch" in r.detail
+            assert r.value is not None          # best-effort attachment
+
+
+def test_shutdown_drains_all_pendings_terminally():
+    oracle = ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS, autostart=False)
+    pends = [oracle.submit_steady(_pkg(), np.full(4, 3.0))
+             for _ in range(3)]
+    oracle.shutdown()
+    for p in pends:
+        assert p.result(timeout=5).status == "shutdown"
+    # submissions after shutdown are rejected terminally, never enqueued
+    late = oracle.submit_steady(_pkg(), np.full(4, 3.0))
+    assert late.result(timeout=1).status == "shutdown"
+    assert oracle.telemetry.snapshot()["by_status"]["shutdown"] == 4
+
+
+def test_nonfinite_payload_rejected_at_submit():
+    oracle = ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS, autostart=False)
+    try:
+        with pytest.raises(ValueError, match="'q'"):
+            oracle.submit_steady(_pkg(), np.array([1.0, np.nan, 2, 3]))
+        with pytest.raises(ValueError, match="'q_traj'"):
+            oracle.submit_transient(
+                _pkg(), np.full((5, 4), np.inf), DT)
+    finally:
+        oracle.shutdown()
+
+
+def test_guardrail_fallback_surfaces_on_response_and_telemetry():
+    with faults.injected({"rom.steady": faults.FaultSpec(mode="nan",
+                                                         times=1)}):
+        with ThermalOracle(fidelity="rom", capacity=2,
+                           build_opts=ROM_OPTS) as oracle:
+            r = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert r.ok and r.fallback["site"] == "rom.steady"
+            clean = oracle.query_steady(_pkg(), np.full(4, 3.0))
+            assert clean.fallback is None
+            np.testing.assert_allclose(r.value, clean.value, atol=1e-8)
+            snap = oracle.telemetry.snapshot()
+            assert snap["request_fallbacks"] == {"rom.steady": 1}
+            assert snap["solver_fallbacks"]["rom.steady"] == 1
+
+
+def test_eviction_race_with_inflight_requests_stays_correct():
+    # a byte budget that holds ~one model while two geometries alternate:
+    # every switch evicts the other's entry while requests are in flight
+    # — all answers must still be ok and match the direct references
+    from repro.serving import ModelCache
+    pkgs = [make_2p5d_package(4), make_2p5d_package(4, htc_top=9000.0)]
+    refs = []
+    for pkg in pkgs:
+        m = build(pkg, "rom", **ROM_OPTS)
+        refs.append(m.observe(m.steady_state(np.full(4, 3.0))))
+    cache = ModelCache(max_bytes=96 * 1024)
+    with ThermalOracle(fidelity="rom", capacity=4, cache=cache,
+                       build_opts=ROM_OPTS) as oracle:
+        pends = [(i % 2, oracle.submit_steady(pkgs[i % 2],
+                                              np.full(4, 3.0)))
+                 for i in range(12)]
+        for which, p in pends:
+            r = p.result(timeout=300)
+            assert r.status == "ok", r
+            np.testing.assert_allclose(r.value, refs[which], atol=1e-6)
+    assert cache.stats()["evictions"] >= 2
+
+
+def test_router_breaker_trips_surface_in_serving_telemetry():
+    with faults.injected({"router.steady.rom":
+                          faults.FaultSpec(mode="raise", times=3)}):
+        with ThermalOracle(fidelity="auto", capacity=2,
+                           build_opts={"tol": 1e-2,
+                                       "rom_opts": {"n_moments": 2},
+                                       "breaker_threshold": 3}) as o:
+            for _ in range(4):
+                r = o.query_steady(_pkg(), np.full(4, 3.0))
+                assert r.ok and r.route is not None
+            router = o.telemetry.snapshot()["router"]
+            assert router["rung_failures"]["rom"] == 3
+            assert router["breaker_trips"] == 1
+            assert router["breaker_skips"].get("rom", 0) >= 1

@@ -1,0 +1,83 @@
+"""Geometry input validation (PR 9): malformed ``Package`` /
+``PackageFamily`` inputs are rejected at ``build()`` / ``build_family()``
+with a precise ``ValueError`` naming the offending field — not an opaque
+singular-Cholesky (or silent NaN poisoning) deep inside the solver tier.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.family import PackageFamily
+from repro.core.fidelity import build, build_family
+from repro.core.geometry import make_2p5d_package, validate_package
+
+
+def _with(pkg, **kw):
+    return dataclasses.replace(pkg, **kw)
+
+
+def _with_layer0(pkg, **kw):
+    layers = (dataclasses.replace(pkg.layers[0], **kw),) + pkg.layers[1:]
+    return dataclasses.replace(pkg, layers=layers)
+
+
+def _with_block0(pkg, **kw):
+    layer = next(ly for ly in pkg.layers if ly.blocks)
+    idx = pkg.layers.index(layer)
+    blocks = (dataclasses.replace(layer.blocks[0], **kw),) \
+        + layer.blocks[1:]
+    layers = pkg.layers[:idx] \
+        + (dataclasses.replace(layer, blocks=blocks),) \
+        + pkg.layers[idx + 1:]
+    return dataclasses.replace(pkg, layers=layers)
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda p: _with(p, length=-0.01), "length"),
+    (lambda p: _with(p, width=0.0), "width"),
+    (lambda p: _with(p, length=float("nan")), "length"),
+    (lambda p: _with(p, htc_top=-5.0), "htc_top"),
+    (lambda p: _with(p, htc_bottom=float("inf")), "htc_bottom"),
+    (lambda p: _with(p, htc_top=0.0, htc_bottom=0.0),
+     "thermally floating"),
+    (lambda p: _with(p, t_ambient=float("nan")), "t_ambient"),
+    (lambda p: _with(p, layers=()), "layers is empty"),
+    (lambda p: _with_layer0(p, thickness=-0.001), "thickness"),
+    (lambda p: _with_layer0(p, thickness=float("nan")), "thickness"),
+    (lambda p: _with_layer0(p, nx=0), "nx/ny"),
+    (lambda p: _with_block0(p, x0=float("nan")), "coordinate x0"),
+    (lambda p: _with_block0(p, x1=-1.0), "degenerate extent"),
+    (lambda p: _with_block0(p, ny=0), "nx/ny"),
+])
+def test_malformed_package_rejected_with_named_field(mutate, match):
+    bad = mutate(make_2p5d_package(4))
+    with pytest.raises(ValueError, match=match):
+        validate_package(bad)
+    # and the SAME error comes out of the build() front door, for every
+    # registered rung's entry point (validation is rung-independent)
+    with pytest.raises(ValueError, match=match):
+        build(bad, "rc")
+
+
+def test_build_family_validates_the_template():
+    bad = _with_layer0(make_2p5d_package(4), thickness=-0.001)
+    fam = PackageFamily(bad, params=("htc_top", "power_scale"))
+    with pytest.raises(ValueError, match="thickness"):
+        build_family(fam, "rom", n_moments=2)
+
+
+def test_valid_package_passes_and_builds():
+    pkg = make_2p5d_package(4)
+    validate_package(pkg)                 # no raise
+    model = build(pkg, "rc")
+    obs = model.observe(model.steady_state(np.full(4, 3.0)))
+    assert np.isfinite(obs).all()
+
+
+def test_error_message_names_package_layer_and_block():
+    bad = _with_block0(make_2p5d_package(4), y1=float("nan"))
+    with pytest.raises(ValueError) as ei:
+        validate_package(bad)
+    msg = str(ei.value)
+    assert "Package" in msg and "layer" in msg and "block[" in msg

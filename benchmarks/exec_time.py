@@ -43,6 +43,15 @@ Measures, per system size and per registered fidelity:
     time, warmed sequential p50/p99 latency for steady and ROM-transient
     queries (the sub-ms headline), and threaded-storm throughput with
     mean batch occupancy from the continuous batcher;
+  * the ``dse_opt`` section (ISSUE 10): gradient-based placement DSE —
+    the multi-start projected-Adam optimizer (gradients through the
+    implicit-adjoint fused-CG steady solve, annealed smooth-max peak
+    objective) vs the B=10k random sweep on the same family/workload,
+    capped at 5% of the sweep's solve count (grad evals priced at
+    forward + one adjoint solve = 2); records both peaks,
+    ``beats_sweep``, wall times, the adjoint registry's CGStats
+    (iterations / residual / converged) and a ROM-rung transient-peak
+    optimization running end to end;
   * the ``router`` section (ISSUE 8): the adaptive fidelity router
     (``build(pkg, "auto", tol=...)``) on every Table-6 system — per
     (system, tol): the rung the router chose, its certified error bound
@@ -238,6 +247,107 @@ def bench_dse_sweep(system: str = "2p5d_16", n_candidates: int = 128)\
           f"batched={t_warm:.3f}s (cold {t_cold:.2f}s) loop={t_loop:.2f}s "
           f"speedup={out['speedup']:.1f}x "
           f"match={out['match_max_err_degc']:.2e}C", flush=True)
+    return out
+
+
+def bench_dse_opt(system: str = "2p5d_16", sweep_b: int = 10000,
+                  chunk: int = 512, n_starts: int = 6) -> dict:
+    """Gradient DSE (ISSUE 10 proof): the multi-start implicit-adjoint
+    optimizer vs the B-candidate random sweep at <=5% of its solves.
+
+    Same family, workload and f64 numerics on both sides. The sweep pays
+    ``sweep_b`` steady solves (chunk-streamed cg tier); the optimizer is
+    ``optimize_family`` (projected Adam on the annealed smooth-max peak,
+    gradients through the implicit-adjoint fused-CG path) capped at a
+    ``budget`` of ``0.05 * sweep_b`` solve-equivalents — a gradient
+    evaluation priced at 2 (forward + ONE adjoint solve). The analytic
+    count is cross-checked against the adjoint stats registry, whose
+    CGStats (iterations / residual / converged, with the standard
+    ``warn_unconverged`` iteration-cap discipline) are recorded. A small
+    ROM-rung transient-peak optimization runs end to end in the same
+    section (reverse-differentiated r x r ZOH rollout).
+    """
+    from repro.core import optimize_family
+    from repro.core.rc_model import RCFamilyModel
+    from repro.kernels.fused_cg import adjoint
+
+    pkg, n_src, _ = _package(system)
+    with jax.experimental.enable_x64():
+        family = PackageFamily(pkg, params=("grid_offsets",))
+        model = RCFamilyModel(family, dtype=jnp.float64, solver="cg",
+                              chunk_size=chunk)
+        # a hot cluster: the workload placement gradients actually feel
+        q = np.full(n_src, 0.4)
+        hot = [5, 6, 9, 10] if n_src >= 16 else list(
+            range(max(1, n_src // 4)))
+        q[hot] = 3.0
+
+        t0 = time.perf_counter()
+        params = family.sample_params(sweep_b, seed=0)
+        peaks = np.asarray(model.peak_steady(
+            params, np.broadcast_to(q, (sweep_b, n_src))))
+        t_sweep = time.perf_counter() - t0
+        sweep_best = float(peaks.min())
+
+        budget = int(0.05 * sweep_b)
+        # trade starts for depth when the budget is tight (smoke): ~15+
+        # Adam iterations per start matter more than a wide population
+        n_starts = max(2, min(n_starts, budget // 32))
+        # size the anneal to the budget so tau actually reaches tau1
+        steps = max(1, (budget - 2 * n_starts) // (2 * n_starts))
+        adjoint.reset_adjoint_stats()
+        res = optimize_family(model, q, n_starts=n_starts, method="adam",
+                              steps=steps, lr=0.1, tau=(2.0, 0.05),
+                              budget=budget, seed=0)
+        counts = adjoint.solve_counts()
+        site = "rc family peak_steady adjoint CG"
+        stats = adjoint.last_stats(site)
+        adj_rows = counts.get(site, {}).get("rows", 0)
+        adj_stats = {
+            "adjoint_row_solves": adj_rows,
+            "adjoint_iters_max": int(np.max(stats.iterations))
+            if stats is not None else None,
+            "adjoint_residual_max": float(np.max(stats.residual))
+            if stats is not None else None,
+            "adjoint_converged": bool(np.all(stats.converged))
+            if stats is not None else None,
+        }
+
+        # ROM-rung transient objective end to end (whole-trace peak)
+        rom = build_family(family, "rom", dtype=jnp.float64)
+        t_traj = 20
+        qt = np.tile(q, (t_traj, 1)) * np.linspace(
+            0.5, 1.5, t_traj)[:, None]
+        t0 = time.perf_counter()
+        res_t = optimize_family(rom, objective="peak_transient",
+                                q_traj=qt, dt=0.01, n_starts=4, steps=10,
+                                budget=200, seed=0)
+        t_rom = time.perf_counter() - t0
+
+    out = {"system": system, "nodes": family.grid.n,
+           "n_params": family.n_params,
+           "sweep_b": sweep_b, "sweep_best_degc": sweep_best,
+           "sweep_s": t_sweep,
+           "opt_best_degc": res.best_value,
+           "opt_method": res.method, "opt_iters": res.n_iters,
+           "opt_evals": res.n_evals,
+           "opt_solve_equiv": res.n_solve_equiv,
+           "opt_budget": budget,
+           "opt_s": res.wall_s,
+           "solve_frac_of_sweep": res.n_solve_equiv / sweep_b,
+           "beats_sweep": bool(res.best_value <= sweep_best),
+           **adj_stats,
+           "rom_transient": {"t_steps": t_traj,
+                             "best_degc": res_t.best_value,
+                             "solve_equiv": res_t.n_solve_equiv,
+                             "wall_s": t_rom}}
+    print(f"[dse_opt  ] {system:8s} sweep B={sweep_b} "
+          f"best={sweep_best:.3f}C ({t_sweep:.1f}s) | opt "
+          f"best={res.best_value:.3f}C solves={res.n_solve_equiv} "
+          f"({100 * out['solve_frac_of_sweep']:.1f}% of sweep, "
+          f"{res.wall_s:.1f}s) beats_sweep={out['beats_sweep']} | "
+          f"adjoint rows={adj_rows} "
+          f"iters<={adj_stats['adjoint_iters_max']}", flush=True)
     return out
 
 
@@ -762,6 +872,7 @@ def main(argv=None):
         # reference needs an N x N host expm — default/full runs only)
         rom_systems, rom_steps = ["2p5d_16"], 200
         dse_b = args.dse_b or 32
+        dse_opt_kw = dict(sweep_b=2000, chunk=512)
         sharded_kw = dict(b_scale=256, b_stream=1024, chunk=256, reps=2)
         serving_kw = dict(n_requests=50, storm=32)
     else:
@@ -778,6 +889,7 @@ def main(argv=None):
         rom_systems = ["2p5d_16", "2p5d_64", "3d_16x6", "2p5d_256"]
         rom_steps = 400
         dse_b = args.dse_b or 128
+        dse_opt_kw = dict(sweep_b=10000, chunk=512)
         sharded_kw = dict(b_scale=2048, b_stream=10000, chunk=512, reps=3)
         serving_kw = dict(n_requests=200, storm=64)
     assembly = [bench_assembly(s) for s in assembly_systems]
@@ -803,8 +915,9 @@ def main(argv=None):
     # certified>=measured assertion is per system, smoke included)
     router = [bench_router(s)
               for s in ["2p5d_16", "2p5d_36", "2p5d_64", "3d_16x3"]]
-    # last: the sweep runs (and traces) under x64
+    # last: the sweeps run (and trace) under x64
     dse = [bench_dse_sweep("2p5d_16", n_candidates=dse_b)]
+    dse_opt = [bench_dse_opt("2p5d_16", **dse_opt_kw)]
     results = {"bench": "exec_time", "full": bool(args.full),
                "smoke": bool(args.smoke),
                "assembly": assembly, "systems": systems,
@@ -817,7 +930,8 @@ def main(argv=None):
                "sharded_dse": sharded,
                "serving": serving,
                "router": router,
-               "dse_sweep": dse}
+               "dse_sweep": dse,
+               "dse_opt": dse_opt}
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
@@ -842,6 +956,12 @@ def main(argv=None):
               f"{s['max_obs_err_vs_dss_degc']:.3f}C")
     for d in dse:
         print(f"dse,{d['system']},B{d['b']},speedup,{d['speedup']:.1f}x")
+    for d in dse_opt:
+        print(f"dse_opt,{d['system']},sweepB{d['sweep_b']},"
+              f"sweep_best,{d['sweep_best_degc']:.3f}C,opt_best,"
+              f"{d['opt_best_degc']:.3f}C,solves,{d['opt_solve_equiv']},"
+              f"frac,{d['solve_frac_of_sweep']:.3f},beats_sweep,"
+              f"{d['beats_sweep']}")
     for r in sharded["scaling"]:
         print(f"sharded,{sharded['system']},B{r['b']},dev{r['devices']},"
               f"speedup,{r['speedup_vs_1dev']:.2f}x")

@@ -57,7 +57,8 @@ print(f"\nrollout speedups: RC is {t_roll['fvm']/t_roll['rc']:.0f}x "
 # Level 2 of the API: a whole design space in one device call. A
 # PackageFamily shares the template's topology; placement/cooling
 # parameters ride a batch axis (see examples/thermal_dse.py for the full
-# sweep).
+# sweep, and examples/thermal_opt.py for the gradient-based optimizer
+# that beats the 10k-candidate sweep at ~5% of its solves).
 from repro.core import PackageFamily, build_family  # noqa: E402
 
 family = PackageFamily(pkg, params=("grid_offsets",))

@@ -130,3 +130,16 @@ print(f"scaling vs single-device vmap (B={Bs}): "
       f"is expected — the number to watch on real multi-device hardware, "
       f"where each shard owns its chip. The memory win is unconditional: "
       f"device footprint is one 512-candidate chunk, not all {B10}.)")
+
+# ---------------------------------------------------------------------------
+# beyond brute force: the same family is DIFFERENTIABLE. The cg tier's
+# peak steady temperature reverse-differentiates through the
+# implicit-adjoint fused-CG solve (kernels/fused_cg/adjoint.py), and
+# core/optimize.py's multi-start projected Adam finds a COOLER placement
+# than this 10k-candidate sweep using ~5% of its solves — see
+# examples/thermal_opt.py for that walkthrough (steady and ROM-transient
+# objectives, solve-equivalent accounting from the adjoint registry).
+# ---------------------------------------------------------------------------
+print("\nnext: PYTHONPATH=src python examples/thermal_opt.py "
+      "(gradient-based placement optimization beating this sweep "
+      "at ~5% of the solve budget)")

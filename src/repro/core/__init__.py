@@ -33,6 +33,7 @@ from .geometry import (Block, Layer, NodeGrid, Package, chiplet_tags,
                        make_2p5d_package, make_3d_package,
                        make_tpu_tray_package, package_from_name)
 from .materials import MATERIALS, HeatsinkSpec, Material
+from .optimize import OptResult, minimize_multistart, optimize_family
 from .power import V5E, HardwareSpec, StepCost, chip_power
 from .rc_model import (RCFamilyModel, RCNetwork, ThermalRCModel,
                        build_model, build_network, observation_matrix)
@@ -64,6 +65,7 @@ __all__ = [
     "make_2p5d_package", "make_3d_package", "make_tpu_tray_package",
     "package_from_name",
     "MATERIALS", "HeatsinkSpec", "Material",
+    "OptResult", "minimize_multistart", "optimize_family",
     "V5E", "HardwareSpec", "StepCost", "chip_power",
     "RCFamilyModel", "RCNetwork", "ThermalRCModel", "build_model",
     "build_network", "observation_matrix",

@@ -29,6 +29,7 @@ import numpy as np
 
 from ..distribution.family_exec import FamilyExecutor
 from ..kernels.coo_matvec.ops import coo_matvec, coo_plan, coo_segment_sum
+from ..kernels.fused_cg.adjoint import make_implicit_steady
 from ..kernels.fused_cg.ops import (CGStats, fused_cg_plan, fused_cg_solve,
                                     pcg_loop, resolve_cg_impl,
                                     warn_unconverged)
@@ -730,6 +731,7 @@ class RCFamilyModel:
         self.solver = resolve_solver(solver, family.sym.n)
         self.cg_impl = resolve_cg_impl(cg_impl)
         self._fused_plan_cache = None
+        self._implicit_steady_cache = None
         self.last_cg_stats: Optional[CGStats] = None
         self._cbase = jnp.asarray(family.coord_base, dtype)
         self._cjac = jnp.asarray(family.coord_jac, dtype)
@@ -895,26 +897,94 @@ class RCFamilyModel:
                              in_axes=(0, 0), per_candidate=True,
                              pad_rows=(None, self._pad_param_row))
 
+    @property
+    def _implicit_steady(self):
+        """Reverse-differentiable matrix-free steady solver (cg tier):
+        the ``jax.custom_vjp`` implicit-adjoint wrapper around the fused
+        CG kernel (``kernels/fused_cg/adjoint.py``) — forward is the
+        unchanged fused ``while_loop``, backward is ONE extra fused CG
+        solve of the self-adjoint system. Built lazily per model; stats
+        from both directions land on the adjoint registry under the
+        sites named here (see ``adjoint.last_stats``/``solve_counts``)."""
+        if self._implicit_steady_cache is None:
+            self._implicit_steady_cache = make_implicit_steady(
+                self._fused_plan, tol=self.cg_tol,
+                maxiter=max(self.cg_maxiter, 1000), impl=self.cg_impl,
+                backend=self.num.matvec_backend,
+                site="rc family peak_steady adjoint CG")
+        return self._implicit_steady_cache
+
+    def _steady_obs_one(self, p, qb):
+        """ONE candidate's steady observation temps (n_obs,), pure jax
+        and reverse-differentiable on BOTH solver tiers. The cg tier
+        rides the implicit-adjoint fused solve (matrix-free, no dense
+        N x N anywhere in the grad graph); the dense tier factors the
+        SPD ``-G`` with a Cholesky solve."""
+        v = self._network(p.astype(self.dtype))
+        rhs = v["P"] @ (qb.astype(self.dtype) * v["power_scale"])
+        if self.solver == "cg":
+            diag = self.num.neg_g_diag(v["gvals"], v["gconv"])
+            th = self._implicit_steady(diag, v["gvals"], rhs)
+        else:
+            g = self.num.dense_g(v["gvals"], v["gconv"])
+            chol = jnp.linalg.cholesky(-g)
+            th = jax.scipy.linalg.cho_solve((chol, True), rhs)
+        return v["H"] @ th + v["t_ambient"]
+
+    def _peak_one(self, p, qb, tau):
+        """Scalar peak objective for one candidate. ``tau`` None -> the
+        true max (gradient follows the argmax observation point);
+        otherwise the smooth-max ``tau * logsumexp(obs / tau)`` the
+        optimizer anneals (an upper bound on max that -> max as
+        tau -> 0)."""
+        obs = self._steady_obs_one(p, qb)
+        if tau is None:
+            return jnp.max(obs)
+        return tau * jax.scipy.special.logsumexp(obs / tau)
+
     def peak_steady(self, params, q_src) -> jnp.ndarray:
         """Differentiable peak steady temperature per candidate (B,).
 
-        ``jax.grad``-able w.r.t. ``params`` end to end (groundwork for
-        gradient-based DSE): the numeric phase is pure jax and the solve
-        is the dense path — no iteration-count-dependent ``while_loop``
-        in the way of reverse-mode AD. Deliberately NOT routed through
-        the executor (host-side padding/chunking would break tracing);
-        for placement optimization B is a handful of optimizer states,
-        not a sweep. Softmax-free: the true max, so the gradient follows
-        the argmax observation point.
+        ``jax.grad``-able w.r.t. ``params`` end to end on BOTH solver
+        tiers: the numeric phase is pure jax, the dense tier solves by
+        Cholesky (reverse-differentiable), and the cg tier uses the
+        implicit-adjoint fused solve — one extra CG solve per backward
+        pass instead of an unrolled ``while_loop``. Executor-routed, so
+        candidate batches shard over the mesh like any sweep (for
+        chunk-streamed or padded batches take gradients through
+        :meth:`peak_steady_and_grad`, whose padding is masked on the
+        host — tracing ``jax.grad`` through a chunked ``run()`` would
+        hit the host landing). Softmax-free: the true max.
         """
-        def one(p, qb):
-            v = self._network(p.astype(self.dtype))
-            g = self.num.dense_g(v["gvals"], v["gconv"])
-            rhs = v["P"] @ (qb.astype(self.dtype) * v["power_scale"])
-            th = jnp.linalg.solve(-g, rhs)
-            return jnp.max(v["H"] @ th + v["t_ambient"])
+        # q pad rows are ones, not zeros: a zero rhs makes the relative CG
+        # residual 0/0 and trips warn_unconverged for rows that are
+        # discarded anyway.
+        return self.exec.run(
+            f"{self._ns}:rc_peak", lambda p, q: self._peak_one(p, q, None),
+            (params, q_src), in_axes=(0, 0), per_candidate=True,
+            pad_rows=(self._pad_param_row, 1.0))
 
-        return jax.vmap(one)(jnp.asarray(params), jnp.asarray(q_src))
+    def peak_steady_and_grad(self, params, q_src, tau=None):
+        """Per-candidate peak objective AND its params-gradient:
+        ``params (B, P), q_src (S,) -> (value (B,), grad (B, P))``.
+
+        The multi-start optimizer's inner evaluation (``core/optimize.py``):
+        one workload shared across all starts, per-start value/grad rows.
+        Routed through the executor's pad-aware value-and-grad mode, so
+        start batches mesh-shard and chunk-stream like any sweep while
+        pad rows (the template's ``base_params()``) are masked out of the
+        result. ``tau`` selects the smooth-max temperature (a traced
+        scalar — annealing it does NOT retrace); None = true max."""
+        use_tau = tau is not None
+        tau_arg = jnp.asarray(1.0 if tau is None else tau, self.dtype)
+
+        def objective(p, q, t):
+            return self._peak_one(p, q, t if use_tau else None)
+
+        return self.exec.run_value_and_grad(
+            (f"{self._ns}:rc_peak_grad", use_tau), objective,
+            (params, q_src, tau_arg), in_axes=(0, None, None),
+            pad_rows=(self._pad_param_row, None, None))
 
     # -- batched transient ---------------------------------------------------
     def simulate_family(self, params, q_traj, dt: float) -> jnp.ndarray:

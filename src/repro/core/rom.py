@@ -578,6 +578,76 @@ class ROMFamilyModel:
         """Traced per-candidate reduced system (vmap me)."""
         return self.rcf.reduced_ops(p, self._vd)
 
+    def _discretize_one(self, p, dt: float):
+        """Exact ZOH of ONE candidate's reduced pencil (vmap me): the
+        r x r ``expm`` + solves, pure jax and reverse-differentiable —
+        shared by :meth:`simulate_family` and the transient-peak
+        gradient objective."""
+        ghat, chat, phat, hhat, t_amb, scale = self._reduced(
+            p.astype(self.dtype))
+        a = jnp.linalg.solve(chat, ghat)
+        ad = jax.scipy.linalg.expm(a * dt)
+        eye = jnp.eye(a.shape[0], dtype=a.dtype)
+        bd = jnp.linalg.solve(a, ad - eye) \
+            @ jnp.linalg.solve(chat, phat)
+        return ad, bd, hhat, t_amb, scale
+
+    def _peak_transient_one(self, p, q_t, tau, dt: float):
+        """Scalar transient-peak objective for one candidate: the max
+        observation temperature over a whole ZOH rollout of ``q_t``
+        (T, S). The r x r scan is reverse-differentiable end to end (no
+        CG in the graph), which is what makes WHOLE power traces
+        optimizable on the ROM rung. ``tau`` None -> true max over
+        (T, n_obs); else the annealable smooth-max."""
+        ad, bd, hhat, t_amb, scale = self._discretize_one(p, dt)
+
+        def body(th, qt):
+            th = ad @ th + bd @ (qt.astype(self.dtype) * scale)
+            return th, hhat @ th
+
+        th0 = jnp.zeros((self.r,), self.dtype)
+        _, obs = jax.lax.scan(body, th0, q_t.astype(self.dtype))
+        obs = obs + t_amb
+        if tau is None:
+            return jnp.max(obs)
+        return tau * jax.scipy.special.logsumexp(obs.ravel() / tau)
+
+    def peak_transient(self, params, q_traj,
+                       dt: Optional[float] = None) -> jnp.ndarray:
+        """params (B, P), q_traj (T, S) shared trace -> true peak
+        transient temperature per candidate (B,). Executor-routed."""
+        dt = self.ts if dt is None else float(dt)
+        return self.rcf.exec.run(
+            (f"{self.rcf._ns}:rom_peak", round(dt, 12)),
+            lambda p, q: self._peak_transient_one(p, q, None, dt),
+            (params, q_traj), in_axes=(0, None), per_candidate=True,
+            pad_rows=(self.rcf._pad_param_row, None))
+
+    def peak_transient_and_grad(self, params, q_traj,
+                                dt: Optional[float] = None, tau=None):
+        """Per-candidate transient-peak objective and params-gradient:
+        ``params (B, P), q_traj (T, S) -> (value (B,), grad (B, P))``.
+
+        The ROM-rung transient leg of the multi-start optimizer
+        (``core/optimize.py``): each backward pass reverse-scans the
+        r x r rollout (node-count independent), so optimizing a whole
+        WL trace costs reduced-order work only. Routed through the
+        executor's pad-aware value-and-grad mode like the steady leg;
+        ``tau`` is a traced smooth-max temperature (annealing does not
+        retrace), None = true max."""
+        dt = self.ts if dt is None else float(dt)
+        use_tau = tau is not None
+        tau_arg = jnp.asarray(1.0 if tau is None else tau, self.dtype)
+
+        def objective(p, q, t):
+            return self._peak_transient_one(p, q, t if use_tau else None,
+                                            dt)
+
+        return self.rcf.exec.run_value_and_grad(
+            (f"{self.rcf._ns}:rom_peak_grad", round(dt, 12), use_tau),
+            objective, (params, q_traj, tau_arg), in_axes=(0, None, None),
+            pad_rows=(self.rcf._pad_param_row, None, None))
+
     def steady_state_batch(self, params, q_src) -> jnp.ndarray:
         """params (B, P), q_src (B, S) -> reduced steady states (B, r).
 
@@ -618,14 +688,7 @@ class ROMFamilyModel:
         dt = self.ts if dt is None else float(dt)
 
         def discretize_one(p):
-            ghat, chat, phat, hhat, t_amb, scale = self._reduced(
-                p.astype(self.dtype))
-            a = jnp.linalg.solve(chat, ghat)
-            ad = jax.scipy.linalg.expm(a * dt)
-            eye = jnp.eye(a.shape[0], dtype=a.dtype)
-            bd = jnp.linalg.solve(a, ad - eye) \
-                @ jnp.linalg.solve(chat, phat)
-            return ad, bd, hhat, t_amb, scale
+            return self._discretize_one(p, dt)
 
         return self.rcf.exec.run(
             # namespaced per family stack; dt-rounded like the _zoh cache

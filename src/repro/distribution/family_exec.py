@@ -321,3 +321,26 @@ class FamilyExecutor:
         out = jax.tree_util.tree_map(
             lambda *leaves: np.concatenate(leaves, axis=out_axis), *outs)
         return out if b_pad == b else unpad(out)
+
+    def run_value_and_grad(self, key, fn: Callable, args: Sequence,
+                           in_axes: Sequence[Optional[int]],
+                           pad_rows: Optional[Sequence] = None,
+                           argnums: int = 0):
+        """Pad-aware per-candidate value-and-grad (the gradient-DSE path).
+
+        ``fn`` maps ONE candidate to a scalar objective; this evaluates
+        ``jax.value_and_grad(fn, argnums)`` vmapped over the candidate
+        batch through the same machinery as :meth:`run` — mesh sharding,
+        chunk streaming, jit caching — returning ``(values, grads)`` with
+        the candidate axis leading on both (``grads`` matches the
+        ``argnums`` argument's trailing shape). Padding is MASKED by
+        construction: pad rows evaluate the caller's ``pad_rows`` element
+        (family models pass the template's always-valid ``base_params()``),
+        each row's value/grad is independent of every other row, and the
+        pad tail is sliced off before returning — a padded start can never
+        contaminate a real candidate's objective or gradient. Chunked
+        batches land on the host per chunk exactly like :meth:`run`
+        (optimizer loops consume host values anyway)."""
+        vg = jax.value_and_grad(fn, argnums=argnums)
+        return self.run(key, vg, args, in_axes=in_axes, out_axis=0,
+                        per_candidate=True, pad_rows=pad_rows)

@@ -25,9 +25,15 @@ per-row convergence stats (``CGStats``). Three implementations share it:
 preconditioner (used by the dense-tier family solver with its template
 Cholesky preconditioner); it returns the same ``CGStats``.
 
-NOTE: the fused paths are built on ``lax.while_loop`` and are therefore
-not reverse-mode differentiable; no ladder path differentiates through a
-CG solve (gradient work rides the dense tier).
+NOTE: the fused paths are built on ``lax.while_loop``, so reverse-mode
+AD cannot unroll them directly. STEADY solves are differentiable anyway
+via the implicit-function-theorem wrapper in ``adjoint.py``
+(:func:`repro.kernels.fused_cg.adjoint.make_implicit_steady`): the
+backward pass is ONE extra fused CG solve of the self-adjoint system
+plus an O(E) residual VJP — this is what takes ``peak_steady`` gradients
+off the dense tier. Transient steppers still do not differentiate
+through their inner CG; gradient transients ride the ROM rung's r x r
+``scan`` instead (``core/optimize.py``).
 """
 from __future__ import annotations
 
@@ -185,6 +191,22 @@ def fused_cg_plan(rows, cols, num_segments: int,
         ell_src[rows_s, pos] = order
         ell_mask[rows_s, pos] = True
 
+    # The plan is host-built but CACHED by callers (lazy `_fused_plan`
+    # properties), and first touch routinely happens inside a jit trace:
+    # force the device conversions to compile-time constants, or the
+    # cached plan would hold that trace's device_put tracers and leak
+    # them into every later trace (bit us when the implicit-adjoint
+    # backward pass first ran under grad-of-jit).
+    with jax.ensure_compile_time_eval():
+        return _freeze_plan(n, e, block_edges, row_span, col_span, n_pad,
+                            e_pad, n_tiles, ell_k, perm, inv, order,
+                            rows_s, cols_s, rows_p, cols_rel, col_base,
+                            ell_cols, ell_src, ell_mask)
+
+
+def _freeze_plan(n, e, block_edges, row_span, col_span, n_pad, e_pad,
+                 n_tiles, ell_k, perm, inv, order, rows_s, cols_s, rows_p,
+                 cols_rel, col_base, ell_cols, ell_src, ell_mask):
     as_i32 = lambda a: jnp.asarray(a, jnp.int32)
     return FusedCGPlan(
         n=n, n_edges=e, block_edges=block_edges, row_span=row_span,
